@@ -1,0 +1,64 @@
+"""The paper's complexity claim: attention cost scaling vs sequence length.
+
+Measures µs/call (jitted, CPU) for softmax / elu-linear / taylor-2 chunked
+attention across sequence lengths, fits the scaling exponent
+log(t_n2/t_n1)/log(n2/n1), and cross-checks with trip-exact walker FLOPs.
+Softmax should trend ~O(n²), both linear variants ~O(n)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.analysis.flops import count_fn
+from repro.core import (
+    TaylorConfig,
+    linear_attention,
+    softmax_attention,
+    taylor_attention_chunked,
+)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    b, h, d = 1, 4, 32
+    cfg = TaylorConfig(order=2, alpha=3.0)
+    lengths = (256, 512, 1024, 2048)
+
+    impls = {
+        "softmax": jax.jit(lambda q, k, v: softmax_attention(q, k, v, causal=True)),
+        "linear_elu": jax.jit(lambda q, k, v: linear_attention(q, k, v, causal=True)),
+        "taylor2": jax.jit(
+            functools.partial(taylor_attention_chunked, cfg=cfg, chunk=128)
+        ),
+    }
+    times = {k: [] for k in impls}
+    flops = {k: [] for k in impls}
+    for n in lengths:
+        q = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+        for name, fn in impls.items():
+            us = time_fn(fn, q, k, v, iters=5)
+            times[name].append(us)
+            f = count_fn(fn, q, k, v)["flops"]
+            flops[name].append(f)
+            rows.append(emit(f"complexity_{name}_n{n}", us, f"flops={f:.3e}"))
+
+    for name in impls:
+        t = times[name]
+        exp_t = np.log(t[-1] / t[0]) / np.log(lengths[-1] / lengths[0])
+        f = flops[name]
+        exp_f = np.log(f[-1] / f[0]) / np.log(lengths[-1] / lengths[0])
+        rows.append(emit(f"complexity_{name}_scaling", 0.0,
+                         f"time_exponent={exp_t:.2f};flops_exponent={exp_f:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

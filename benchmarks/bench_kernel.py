@@ -1,0 +1,58 @@
+"""Pallas Taylor-attention kernel vs reference paths.
+
+On CPU the kernel runs in interpret mode (functional check + flop
+accounting); the derived column carries the walker-FLOP comparison and the
+kernel's VMEM working-set estimate — the real device win is exercised on
+TPU with the identical call."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.analysis.flops import count_fn
+from repro.core import TaylorConfig, taylor_attention_chunked
+from repro.core.feature_map import layernorm_no_affine
+from repro.kernels.taylor_attention.kernel import D_TILE
+from repro.kernels.taylor_attention.ops import taylor_attention_kernel
+from repro.kernels.taylor_attention.ref import taylor_attention_ref
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    b, h, hk, n, d = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hk, n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hk, n, d)), jnp.float32)
+
+    kfn = functools.partial(taylor_attention_kernel, interpret=True)
+    out = kfn(q, k, v)
+    qn, kn = layernorm_no_affine(q), layernorm_no_affine(k)
+    ref = taylor_attention_ref(qn.reshape(b, hk, h // hk, n, d), kn, v).reshape(
+        b, h, n, d
+    )
+    err = float(jnp.max(jnp.abs(out - ref)))
+    us_k = time_fn(kfn, q, k, v, iters=3, warmup=1)
+    rows.append(emit("kernel_interpret", us_k, f"max_err_vs_ref={err:.2e}"))
+
+    xla = functools.partial(taylor_attention_chunked, cfg=TaylorConfig(), chunk=128)
+    us_x = time_fn(xla, q, k, v, iters=3, warmup=1)
+    rows.append(emit("kernel_xla_chunked_path", us_x, "reference_path"))
+
+    fl = count_fn(xla, q, k, v)
+    # kernel VMEM working set (f32): S2 + S1 + z2 + transients
+    d_pad, dvt, C = 128, 128, 128
+    vmem = (d_pad * d_pad * dvt + d_pad * dvt + d_pad * d_pad) * 4 + (
+        C * D_TILE * d_pad
+    ) * 4
+    rows.append(emit("kernel_flops_and_vmem", 0.0,
+                     f"flops={fl['flops']:.3e};vmem_bytes={vmem}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

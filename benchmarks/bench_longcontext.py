@@ -1,0 +1,48 @@
+"""Long-context decode economics (the paper's O(1)-state claim, beyond the
+paper's own evaluation): decode cache bytes and per-token cost vs context
+length, taylor state vs softmax KV cache, for an MQA 7B-class geometry."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.models.lm import lm_decode_step, lm_init_caches
+
+
+def _cache_bytes(t):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(t))
+
+
+def run():
+    rows = []
+    cfg_t = get_reduced("granite-20b")  # taylor + MQA
+    cfg_s = cfg_t.replace(attention="softmax")
+    for n_ctx in (1024, 8192, 65536):
+        bt = _cache_bytes(lm_init_caches(cfg_t, 1, n_ctx))
+        bs = _cache_bytes(lm_init_caches(cfg_s, 1, n_ctx))
+        rows.append(emit(f"longctx_cache_bytes_n{n_ctx}", 0.0,
+                         f"taylor={bt};kv={bs};ratio={bs / bt:.2f}"))
+
+    # per-token decode cost (CPU µs, small config — the trend is the point)
+    params = lm_init(jax.random.PRNGKey(0), cfg_t)
+    params_s = lm_init(jax.random.PRNGKey(0), cfg_s)
+    tok = jnp.zeros((1,), jnp.int32)
+    for n_ctx in (1024, 8192):
+        for name, cfg, p in (("taylor", cfg_t, params), ("softmax", cfg_s, params_s)):
+            caches = lm_init_caches(cfg, 1, n_ctx, jnp.dtype(cfg.dtype))
+            import functools
+
+            fn = jax.jit(functools.partial(lm_decode_step, cfg=cfg))
+            pos = jnp.asarray(n_ctx - 1, jnp.int32)
+            us = time_fn(lambda: fn(p, tok, caches, pos)[0], iters=3, warmup=1)
+            rows.append(emit(f"longctx_decode_{name}_n{n_ctx}", us, "per_token"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_approx       — paper Figure 1 (Taylor approximation quality)
+  bench_complexity   — the linear-complexity claim (§4)
+  bench_kernel       — Pallas kernel vs reference (hardware adaptation)
+  bench_quality      — §5 "Application" (left empty in the paper)
+  bench_longcontext  — O(1)-state decode economics (beyond-paper)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_approx,
+        bench_complexity,
+        bench_kernel,
+        bench_longcontext,
+        bench_quality,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for mod in (bench_approx, bench_complexity, bench_kernel,
+                bench_longcontext, bench_quality):
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---")
+        try:
+            mod.run()
+        except Exception as e:  # pragma: no cover
+            failures.append((name, e))
+            print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
+    print(f"# total wall: {time.time() - t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: train a small LM with the paper's Taylor-linear attention.
+
+Runs on CPU in a few minutes (reduced smollm config, ~1M params; pass
+--full-135m on real hardware for the full SmolLM-135M geometry).  Shows the
+public API end-to-end: config -> data -> sharded state -> fault-tolerant
+training loop -> greedy generation.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config, get_reduced
+from repro.data import make_task
+from repro.models import count_params, lm_init
+from repro.optim import adamw, cosine_warmup
+from repro.serve import generate
+from repro.train import TrainLoopConfig, make_train_step, run_training, train_state_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-135m", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m") if args.full_135m else get_reduced("smollm-135m")
+    print(f"model: {cfg.name} ({count_params(cfg):,} params), "
+          f"attention={cfg.attention} (order-{cfg.taylor.order}, α={cfg.taylor.alpha})")
+
+    task = make_task("bigram", cfg.vocab, args.seq, args.batch, seed=0)
+    opt = adamw(cosine_warmup(2e-3, args.steps // 10, args.steps))
+    state = train_state_init(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+
+    loop = TrainLoopConfig(
+        total_steps=args.steps, checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=100, log_every=20,
+    )
+    state = run_training(
+        step, state,
+        lambda s: {k: jnp.asarray(v) for k, v in task.batch_at(s).items()},
+        loop,
+    )
+
+    prompt = jnp.asarray(task.batch_at(10_000)["tokens"][:2, :16], jnp.int32)
+    out = generate(state.params, {"tokens": prompt}, cfg, steps=12)
+    print("prompt :", prompt[0].tolist())
+    print("greedy :", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Compiled-artifact analysis: roofline terms from dry-run lowerings."""
+
+from repro.analysis.roofline import (
+    TPUV5E,
+    HardwareSpec,
+    collective_bytes,
+    roofline_report,
+)
+
+__all__ = ["TPUV5E", "HardwareSpec", "collective_bytes", "roofline_report"]

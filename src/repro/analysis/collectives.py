@@ -1,0 +1,99 @@
+"""Attribute collective traffic to model source (hillclimb tooling).
+
+XLA keeps ``metadata={op_name="jit(f)/while/body/.../dot_general"}`` on every
+instruction; aggregating collective link-bytes by a trimmed op_name shows
+*which line of the model* pays for each collective — the profile substitute
+this CPU-only container gets.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.collectives artifacts/dryrun/X.hlo.txt
+(or call ``attribute(hlo_text)`` on a fresh ``compiled.as_text()``).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from repro.analysis.roofline import (
+    _COLLECTIVES,
+    _OP_RE,
+    _TRIP_RE,
+    _WHILE_ATTR_RE,
+    _group_size,
+    _result_bytes,
+    _split_blocks,
+    _trip_count,
+)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _trim(op_name: str) -> str:
+    # drop the jit wrapper and trailing op kind; keep the semantic path
+    parts = op_name.split("/")
+    parts = [p for p in parts if not p.startswith("jit(")]
+    return "/".join(parts[:6])
+
+
+def attribute(hlo_text: str, num_partitions: int = 1) -> Dict[Tuple[str, str], float]:
+    m = re.search(r"num_partitions=(\d+)", hlo_text)
+    if m:
+        num_partitions = int(m.group(1))
+    blocks, entry = _split_blocks(hlo_text)
+    out: Dict[Tuple[str, str], float] = defaultdict(float)
+
+    def analyze(name: str, mult: float, seen):
+        if name in seen or name not in blocks:
+            return
+        seen = seen | {name}
+        for line in blocks[name]:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            op = om.group("op")
+            if op == "while":
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    trips = _trip_count(line, blocks.get(wm.group(1), ()))
+                    analyze(wm.group(2), mult * trips, seen)
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                rb = _result_bytes(om.group("res"))
+                g = _group_size(line, num_partitions)
+                link = {
+                    "all-gather": rb * (g - 1) / g,
+                    "reduce-scatter": rb * (g - 1),
+                    "all-reduce": 2 * rb * (g - 1) / g,
+                    "all-to-all": rb * (g - 1) / g,
+                    "collective-permute": rb,
+                }[base]
+                meta = _META_RE.search(line)
+                src = _trim(meta.group(1)) if meta else "?"
+                out[(base, src)] += mult * link
+            else:
+                for cm in re.finditer(
+                    r"(?:calls|to_apply|branch_computations)=[{]?%?([\w.\-]+)", line
+                ):
+                    analyze(cm.group(1), mult, seen)
+
+    analyze(entry or "", 1.0, frozenset())
+    return dict(out)
+
+
+def top_table(hlo_text: str, k: int = 25) -> str:
+    rows = sorted(attribute(hlo_text).items(), key=lambda kv: -kv[1])[:k]
+    lines = [f"{'link GB':>10}  {'kind':<18} source", "-" * 90]
+    for (kind, src), b in rows:
+        lines.append(f"{b / 2**30:10.2f}  {kind:<18} {src}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    with open(sys.argv[1]) as f:
+        print(top_table(f.read()))

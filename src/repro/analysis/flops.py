@@ -1,0 +1,136 @@
+"""Trip-count-aware FLOP / byte accounting from jaxprs.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts while-loop bodies
+ONCE (verified empirically — a 10-trip scan reports 1 trip of flops), so any
+scan-over-layers model is undercounted by ~depth×.  The jaxpr, by contrast,
+carries exact trip counts (``scan`` has a ``length`` param), so we walk it:
+
+  * dot_general / conv: exact matmul FLOPs (2·M·N·K and friends).
+  * scan: body × length;  while: body × ``while_trip_guess`` (unused by our
+    models — everything is scan);  cond: max over branches.
+  * pjit / custom_vjp / remat / closed_call: recurse.
+  * elementwise and everything else: 1 FLOP per output element (second-order
+    detail, but keeps softmax/norm costs visible).
+
+Bytes: per-op operand+result sizes × trips.  This ignores fusion, so it is
+an upper bound on HBM traffic — but it is *consistent* across cells and
+trip-exact, which roofline comparisons need.  We report it alongside XLA's
+(fused but loop-undercounted) number; see EXPERIMENTS.md §Roofline notes.
+
+These are GLOBAL (unpartitioned) numbers: divide by chip count for per-chip
+terms (sharding divides work evenly for our configs; MoE uses fixed
+capacity so this holds there too).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+FLOP_REPORT_KEYS = ("flops", "bytes", "matmul_flops", "elementwise_flops")
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 4 * _size(aval)
+
+
+def _dot_general_flops(eqn) -> int:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        lhs.shape[i] for i in range(len(lhs.shape)) if i not in set(lc) | set(lb)
+    )
+    n = math.prod(
+        rhs.shape[i] for i in range(len(rhs.shape)) if i not in set(rc) | set(rb)
+    )
+    return 2 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    # flops = 2 * out_elems * (kernel spatial+input-channel footprint)
+    k_footprint = math.prod(rhs.shape[:-1]) if len(rhs.shape) else 1
+    return 2 * _size(out) * k_footprint
+
+
+def eqn_flops_bytes(eqn, rec) -> Dict[str, float]:
+    p = eqn.primitive.name
+    if p in ("dot_general",):
+        f = _dot_general_flops(eqn)
+        return {"flops": f, "matmul_flops": f, "elementwise_flops": 0,
+                "bytes": sum(_bytes(v.aval) for v in eqn.invars + eqn.outvars)}
+    if p in ("conv_general_dilated",):
+        f = _conv_flops(eqn)
+        return {"flops": f, "matmul_flops": f, "elementwise_flops": 0,
+                "bytes": sum(_bytes(v.aval) for v in eqn.invars + eqn.outvars)}
+    if p == "scan":
+        body = count_jaxpr(eqn.params["jaxpr"].jaxpr, rec)
+        length = eqn.params["length"]
+        return {k: v * length for k, v in body.items()}
+    if p == "while":
+        body = count_jaxpr(eqn.params["body_jaxpr"].jaxpr, rec)
+        cond = count_jaxpr(eqn.params["cond_jaxpr"].jaxpr, rec)
+        trips = rec.get("while_trip_guess", 1)
+        return {k: (body[k] + cond[k]) * trips for k in body}
+    if p == "cond":
+        branches = [count_jaxpr(b.jaxpr, rec) for b in eqn.params["branches"]]
+        return {k: max(b[k] for b in branches) for k in branches[0]}
+    if p in ("pjit", "jit", "closed_call", "core_call", "remat_call", "xla_call"):
+        inner = eqn.params.get("jaxpr")
+        if inner is not None:
+            return count_jaxpr(getattr(inner, "jaxpr", inner), rec)
+        return _default_cost(eqn)
+    if p == "remat2" or p == "checkpoint":
+        return count_jaxpr(eqn.params["jaxpr"], rec)
+    if p == "custom_vjp_call" or p == "custom_jvp_call":
+        inner = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+        if inner is not None:
+            return count_jaxpr(getattr(inner, "jaxpr", inner), rec)
+        return _default_cost(eqn)
+    if p == "custom_vjp_call_jaxpr":
+        inner = eqn.params.get("fun_jaxpr")
+        return count_jaxpr(getattr(inner, "jaxpr", inner), rec)
+    return _default_cost(eqn)
+
+
+def _default_cost(eqn) -> Dict[str, float]:
+    out_elems = sum(_size(v.aval) for v in eqn.outvars)
+    by = sum(_bytes(v.aval) for v in eqn.invars + eqn.outvars)
+    return {"flops": out_elems, "matmul_flops": 0,
+            "elementwise_flops": out_elems, "bytes": by}
+
+
+def count_jaxpr(jaxpr, rec=None) -> Dict[str, float]:
+    rec = rec if rec is not None else {}
+    total = {k: 0.0 for k in FLOP_REPORT_KEYS}
+    for eqn in jaxpr.eqns:
+        c = eqn_flops_bytes(eqn, rec)
+        for k in total:
+            total[k] += c.get(k, 0.0)
+    return total
+
+
+def count_fn(fn, *args, **kwargs) -> Dict[str, float]:
+    """Trip-aware global FLOPs/bytes of fn(*args) (args may be
+    ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return count_jaxpr(closed.jaxpr)

@@ -1,0 +1,10 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.checkpoint.store import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wait_for_saves,
+)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint", "wait_for_saves"]

@@ -1,0 +1,124 @@
+"""Architecture registry + assigned input shapes.
+
+Each ``configs/<arch>.py`` exports ``CONFIG`` (the exact published config)
+and ``reduced()`` (a tiny same-family config for CPU smoke tests).
+
+Shapes (assigned): every LM-family arch is paired with all four —
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> serve prefill
+  decode_32k   seq 32768,  global_batch 128  -> serve decode (1 token, cache)
+  long_500k    seq 524288, global_batch 1    -> serve decode; requires
+               sub-quadratic attention (taylor backend / SSM) — skipped for
+               pure softmax configs per assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "zamba2-7b",
+    "granite-20b",
+    "qwen2-1.5b",
+    "gemma-7b",
+    "smollm-135m",
+    "kimi-k2-1t-a32b",
+    "qwen2-moe-a2.7b",
+    "whisper-medium",
+    "mamba2-780m",
+    "llama-3.2-vision-11b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch: str, backend: Optional[str] = None, **overrides) -> ModelConfig:
+    """Full published config.  ``backend`` overrides the attention backend
+    ("softmax" = paper-faithful arch baseline, "taylor" = the paper's
+    technique applied to it)."""
+    cfg = _module(arch).CONFIG
+    if backend is not None and not cfg.is_attention_free:
+        cfg = cfg.replace(attention=backend)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def get_reduced(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).reduced()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def applicable_shapes(cfg: ModelConfig) -> tuple:
+    """Which assigned shapes are well-defined for this config (see DESIGN.md
+    §Shape/skip notes)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.is_attention_free or cfg.attention == "taylor":
+        out.append("long_500k")
+    return tuple(out)
+
+
+def input_specs(cfg: ModelConfig, shape: str, reduced_batch: Optional[int] = None):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+
+    For train/prefill this is the full batch; decode specs are the one-token
+    inputs (the caches are built by launch.dryrun via lm_init_caches under
+    eval_shape, and by serve.py for real serving)."""
+    s = SHAPES[shape]
+    b = reduced_batch or s.batch
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    def extras(batch_dims):
+        e = {}
+        if cfg.family == "vlm":
+            e["image_embeds"] = jax.ShapeDtypeStruct(
+                batch_dims + (cfg.n_image_tokens, cfg.vision_dim), act
+            )
+        if cfg.family == "encdec":
+            e["audio_frames"] = jax.ShapeDtypeStruct(
+                batch_dims + (cfg.n_audio_ctx, cfg.d_model), act
+            )
+        return e
+
+    if s.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s.seq), i32),
+            "labels": jax.ShapeDtypeStruct((b, s.seq), i32),
+            **extras((b,)),
+        }
+    if s.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s.seq), i32), **extras((b,))}
+    if s.kind == "decode":
+        return {
+            "token_t": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape)

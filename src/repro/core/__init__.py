@@ -1,0 +1,51 @@
+"""Core: the paper's higher-order (Taylor) linear attention."""
+
+from repro.core.feature_map import (
+    TaylorConfig,
+    elu_features,
+    exp_scores,
+    layernorm_no_affine,
+    poly_scores,
+    symvec,
+    taylor_features,
+)
+from repro.core.linear import linear_attention
+from repro.core.softmax import (
+    flash_softmax_attention,
+    softmax_attention,
+    softmax_decode_step,
+)
+from repro.core.taylor import (
+    TaylorState,
+    init_taylor_state,
+    merge_states,
+    taylor_attention,
+    taylor_attention_chunked,
+    taylor_attention_noncausal,
+    taylor_attention_parallel,
+    taylor_attention_recurrent,
+    taylor_decode_step,
+)
+
+__all__ = [
+    "TaylorConfig",
+    "TaylorState",
+    "elu_features",
+    "exp_scores",
+    "flash_softmax_attention",
+    "init_taylor_state",
+    "layernorm_no_affine",
+    "linear_attention",
+    "merge_states",
+    "poly_scores",
+    "softmax_attention",
+    "softmax_decode_step",
+    "symvec",
+    "taylor_attention",
+    "taylor_attention_chunked",
+    "taylor_attention_noncausal",
+    "taylor_attention_parallel",
+    "taylor_attention_recurrent",
+    "taylor_decode_step",
+    "taylor_features",
+]

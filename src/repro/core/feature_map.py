@@ -1,0 +1,146 @@
+"""Decomposable feature maps for linear-complexity attention.
+
+The paper's contribution is the order-2 Taylor feature map: with
+``s = (q · k) / (alpha * sqrt(d))`` (q, k LayerNorm'd without affine),
+
+    exp(s)  ≈  1 + s + s²/2  =  phi(q) · phi(k)
+
+where ``phi(x) = [1, x * sqrt(a), symvec(x ⊗ x) * a / sqrt(2)]`` and
+``a = 1 / (alpha * sqrt(d))``.  ``symvec`` is the weighted upper-triangular
+vectorisation of the symmetric outer product (off-diagonal entries carry a
+factor sqrt(2)) so that ``symvec(q⊗q) · symvec(k⊗k) = (q·k)²`` with feature
+dimension ``d(d+1)/2`` instead of ``d²``.
+
+All functions operate on the last axis and broadcast over leading axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TaylorConfig:
+    """Configuration of the paper's attention approximation.
+
+    Attributes:
+      order: Taylor order of the exp() expansion (1 or 2; the paper uses 2).
+      alpha: extra logit down-scaling ``alpha > 1`` (the paper chooses 3).
+      normalize_qk: LayerNorm (no affine) on q and k before the dot product,
+        as prescribed by the paper to keep logits near zero.
+      minus_one: drop the constant 1 from the expansion (the paper's §3
+        "intuitive" variant allowing exact zero correlation).  Note this
+        forfeits the positivity guarantee, so it is off by default.
+      sym_state: store second moments in symmetric-compressed form
+        (d(d+1)/2 instead of d² — exact, from the multinomial expansion).
+        Halves decode-state memory; the training path keeps the full form
+        (its custom VJP contractions are d-tiled instead).
+    """
+
+    order: int = 2
+    alpha: float = 3.0
+    normalize_qk: bool = True
+    minus_one: bool = False
+    sym_state: bool = False
+
+    def __post_init__(self):
+        if self.order not in (1, 2):
+            raise ValueError(f"Taylor order must be 1 or 2, got {self.order}")
+        if self.alpha <= 0:
+            raise ValueError(f"alpha must be positive, got {self.alpha}")
+
+    def scale(self, d: int) -> float:
+        """The logit scale a = 1 / (alpha * sqrt(d))."""
+        return 1.0 / (self.alpha * math.sqrt(d))
+
+    def feature_dim(self, d: int) -> int:
+        base = 0 if self.minus_one else 1
+        if self.order == 1:
+            return base + d
+        return base + d + (d * (d + 1)) // 2
+
+
+def layernorm_no_affine(x: Array, eps: float = 1e-6) -> Array:
+    """LayerNorm without the element-wise affine rescaling [Ba2016], as the
+    paper specifies for q and k."""
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+@functools.lru_cache(maxsize=None)
+def _triu_indices(d: int) -> Tuple[tuple, tuple]:
+    import numpy as np  # static (trace-safe) indices
+
+    iu = np.triu_indices(d)
+    return (tuple(int(i) for i in iu[0]), tuple(int(j) for j in iu[1]))
+
+
+def symvec(x: Array) -> Array:
+    """Weighted upper-triangular vectorisation of x ⊗ x.
+
+    Returns features ``psi(x)`` of dim d(d+1)/2 with
+    ``psi(q) · psi(k) = (q · k)²`` exactly:
+    diagonal entries x_m², off-diagonal entries sqrt(2)·x_m·x_l (m < l).
+    """
+    d = x.shape[-1]
+    rows, cols = _triu_indices(d)
+    rows = jnp.asarray(rows)
+    cols = jnp.asarray(cols)
+    feats = x[..., rows] * x[..., cols]
+    w = jnp.where(rows == cols, 1.0, math.sqrt(2.0)).astype(feats.dtype)
+    return feats * w
+
+
+def taylor_features(x: Array, cfg: TaylorConfig, d: int | None = None) -> Array:
+    """The paper's feature map phi(x) with phi(q)·phi(k) = 1 + s + s²/2.
+
+    Args:
+      x: [..., d] (already LayerNorm'd if cfg.normalize_qk handled by caller).
+      cfg: TaylorConfig.
+      d: dimension to use in the scale (defaults to x.shape[-1]; pass the
+        true head dim when x was zero-padded).
+    """
+    d = d if d is not None else x.shape[-1]
+    a = cfg.scale(d)
+    x = x.astype(jnp.float32)
+    parts = []
+    if not cfg.minus_one:
+        ones = jnp.ones(x.shape[:-1] + (1,), dtype=x.dtype)
+        parts.append(ones)
+    parts.append(x * math.sqrt(a))
+    if cfg.order >= 2:
+        parts.append(symvec(x) * (a / math.sqrt(2.0)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def elu_features(x: Array) -> Array:
+    """Katharopoulos et al. (2020) baseline feature map: elu(x) + 1."""
+    x = x.astype(jnp.float32)
+    return jax.nn.elu(x) + 1.0
+
+
+def poly_scores(s: Array, cfg: TaylorConfig) -> Array:
+    """Taylor-expanded attention weights from raw scaled logits s.
+
+    Equals phi(q)·phi(k) when ``s = (q·k) * cfg.scale(d)``; used by the
+    intra-chunk (quadratic) path so the feature map is never materialised.
+    """
+    out = s if cfg.minus_one else 1.0 + s
+    if cfg.order >= 2:
+        out = out + 0.5 * jnp.square(s)
+    return out
+
+
+def exp_scores(s: Array) -> Array:
+    """The exact kernel the Taylor series approximates (for error benchmarks)."""
+    return jnp.exp(s)

@@ -1,0 +1,68 @@
+"""Generic feature-map linear attention (Katharopoulos et al. 2020 baseline,
+and the order-1/2 Taylor maps expressed through explicit features).
+
+``linear_attention(q, k, v, phi)`` computes
+
+    out_i = phi(q_i) · S_i / (phi(q_i) · z_i),   S_i = Σ_{j≤i} phi(k_j) ⊗ v_j
+
+This is the *explicit-features* formulation: mathematically identical to
+``core.taylor`` when ``phi = taylor_features`` (used as a cross-check in the
+tests) and the Katharopoulos elu+1 baseline when ``phi = elu_features``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_map import elu_features, layernorm_no_affine
+
+Array = jax.Array
+FeatureFn = Callable[[Array], Array]
+
+
+def _group(q: Array, h_kv: int) -> Array:
+    b, h, n, d = q.shape
+    return q.reshape(b, h_kv, h // h_kv, n, d)
+
+
+def linear_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    phi: FeatureFn = elu_features,
+    causal: bool = True,
+    normalize_qk: bool = False,
+    eps: float = 1e-6,
+) -> Array:
+    """Linear attention with an arbitrary feature map.
+
+    Causal path uses cumulative sums over explicit features — O(n·D·d_v)
+    memory O(n·D); fine for tests/benchmarks, the production Taylor path
+    lives in core.taylor / the Pallas kernel.
+    """
+    b, h, n, d = q.shape
+    h_kv = k.shape[1]
+    if normalize_qk:
+        q = layernorm_no_affine(q).astype(q.dtype)
+        k = layernorm_no_affine(k).astype(k.dtype)
+    fq = phi(_group(q, h_kv))  # [b,hk,g,n,D]
+    fk = phi(k)  # [b,hk,n,D]
+    v32 = v.astype(jnp.float32)
+    if causal:
+        # S_i = cumsum_j phi(k_j) ⊗ v_j ;  z_i = cumsum_j phi(k_j)
+        kv = jnp.einsum("bkjf,bkjv->bkjfv", fk, v32)
+        S = jnp.cumsum(kv, axis=2)  # [b,hk,n,D,v]
+        z = jnp.cumsum(fk, axis=2)  # [b,hk,n,D]
+        num = jnp.einsum("bkgnf,bknfv->bkgnv", fq, S)
+        den = jnp.einsum("bkgnf,bknf->bkgn", fq, z)
+    else:
+        S = jnp.einsum("bkjf,bkjv->bkfv", fk, v32)
+        z = jnp.sum(fk, axis=2)
+        num = jnp.einsum("bkgnf,bkfv->bkgnv", fq, S)
+        den = jnp.einsum("bkgnf,bkf->bkgn", fq, z)
+    den = jnp.where(jnp.abs(den) < eps, eps, den)
+    out = num / den[..., None]
+    return out.reshape(b, h, n, v.shape[-1]).astype(v.dtype)

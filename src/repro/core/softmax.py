@@ -1,0 +1,133 @@
+"""Exact softmax attention baselines.
+
+Two paths:
+  * ``softmax_attention``       — plain n×n reference (short sequences, tests).
+  * ``flash_softmax_attention`` — online-softmax over key chunks via
+    ``lax.scan`` so n² scores are never materialised (the TPU-safe baseline
+    used for 32k-prefill dry-runs).  Numerically identical (tested).
+
+Both support GQA ([b, h, n, d] queries vs [b, h_kv, n, d] keys/values) and an
+optional additive bias / causal mask.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _group(q: Array, h_kv: int) -> Array:
+    b, h, n, d = q.shape
+    return q.reshape(b, h_kv, h // h_kv, n, d)
+
+
+def softmax_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_offset: int = 0,
+) -> Array:
+    """Reference softmax attention.  q: [b,h,nq,d]; k,v: [b,hk,nk,d].
+
+    ``kv_offset`` shifts query positions for decode: query i attends to
+    keys j with j <= i + kv_offset.
+    """
+    b, h, nq, d = q.shape
+    h_kv, nk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, h_kv)
+    s = jnp.einsum(
+        "bkgid,bkjd->bkgij", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        iq = jnp.arange(nq)[:, None] + kv_offset
+        jk = jnp.arange(nk)[None, :]
+        s = jnp.where(jk <= iq, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bkjv->bkgiv", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(b, h, nq, v.shape[-1]).astype(v.dtype)
+
+
+def flash_softmax_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    chunk: int = 512,
+) -> Array:
+    """Online-softmax (flash-style) attention: scan over key chunks with
+    running (max, sum, acc) — O(n·chunk) live memory instead of O(n²)."""
+    b, h, nq, d = q.shape
+    h_kv, nk = k.shape[1], k.shape[2]
+    d_v = v.shape[-1]
+    if nk % chunk != 0:
+        return softmax_attention(q, k, v, causal=causal, scale=scale)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, h_kv).astype(jnp.float32)
+    g = qg.shape[2]
+    nc = nk // chunk
+
+    ks = jnp.moveaxis(k.reshape(b, h_kv, nc, chunk, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, h_kv, nc, chunk, d_v), 2, 0)
+    iq = jnp.arange(nq)
+
+    def step(carry, xs):
+        m, l, acc = carry  # [b,hk,g,nq], [b,hk,g,nq], [b,hk,g,nq,dv]
+        kc, vc, c_idx = xs
+        s = jnp.einsum(
+            "bkgid,bkjd->bkgij", qg, kc, preferred_element_type=jnp.float32
+        ) * scale
+        if causal:
+            jk = c_idx * chunk + jnp.arange(chunk)
+            s = jnp.where(jk[None, :] <= iq[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgij,bkjv->bkgiv", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h_kv, g, nq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h_kv, g, nq), jnp.float32)
+    a0 = jnp.zeros((b, h_kv, g, nq, d_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (ks, vs, jnp.arange(nc))
+    )
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    return out.reshape(b, h, nq, d_v).astype(v.dtype)
+
+
+def softmax_decode_step(
+    q_t: Array, k_cache: Array, v_cache: Array, length: Array | int,
+    scale: Optional[float] = None,
+) -> Array:
+    """One decode step against a (possibly not-yet-full) KV cache.
+
+    q_t: [b, h, d]; k_cache/v_cache: [b, hk, n_max, d/v]; ``length`` = number
+    of valid cache entries (the new token's k/v must already be written).
+    """
+    b, h, d = q_t.shape
+    h_kv, n_max = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q_t.reshape(b, h_kv, h // h_kv, d)
+    s = jnp.einsum(
+        "bkgd,bkjd->bkgj", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.arange(n_max)[None, :] < jnp.asarray(length).reshape(-1, 1)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bkjv->bkgv", p, v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(b, h, v_cache.shape[-1]).astype(v_cache.dtype)

@@ -1,0 +1,257 @@
+"""Memory-optimal backward for chunked Taylor linear attention.
+
+``lax.scan``'s autodiff saves the carried moment state at every chunk —
+O(n/C · d²·d_v) residuals, which at d=256 heads is GBs per layer.  This
+module gives the chunked attention a custom VJP that saves only (q, k, v)
+and rebuilds states on the fly (FlashLinearAttention-style):
+
+  * pass 1 (forward direction): recompute S_{<c} chunk by chunk; emit dq
+    and the per-chunk state-gradient contributions.
+  * pass 2 (reverse direction): carry the accumulated future state gradient
+    (dS*, dz*) backwards; emit dk, dv.
+
+Residual memory: O(n·(d + d_v)) + two live states.  Compute: ≈2× forward
+(the standard recompute trade).  Gradients are exact (tested against
+autodiff of the parallel-mode reference).
+
+All math below uses raw moments (scale factors applied at contraction time),
+matching core/taylor.py.  q, k must already be LayerNorm'd by the caller.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_map import TaylorConfig, poly_scores
+from repro.core.taylor import (
+    TaylorState,
+    _chunk_inter,
+    _safe_div,
+    _state_update,
+    init_taylor_state,
+)
+
+Array = jax.Array
+
+
+def _poly_deriv(s: Array, cfg: TaylorConfig) -> Array:
+    """d/ds of the truncated exponential: order1 -> 1;  order2 -> 1 + s."""
+    if cfg.order >= 2:
+        return 1.0 + s
+    return jnp.ones_like(s)
+
+
+_VJP_TILE = 8  # d-axis tile bounding backward transients (see _chunk_inter)
+
+
+def _tiles(d: int):
+    t = _VJP_TILE if d % _VJP_TILE == 0 else d
+    return [(t0, t) for t0 in range(0, d, t)]
+
+
+def _dq_quad(qc32, dnum, s2, half_a2):
+    """2·(a²/2)·Σ_{e,v} q_e S2[d,e,v] dnum_v, d-tiled (no [*,c,d,v] temp)."""
+    d = qc32.shape[-1]
+    parts = []
+    for t0, t in _tiles(d):
+        s2t = s2[:, :, t0 : t0 + t]  # [b,k,T,e,v]
+        w = jnp.einsum("bkgiv,bktev->bkgite", dnum, s2t)
+        parts.append(jnp.einsum("bkgite,bkgie->bkgit", w, qc32))
+    return (2.0 * half_a2) * jnp.concatenate(parts, axis=-1)
+
+
+def _dk_dv_from_ds2(kc32, vc32, ds2):
+    """Gradients of the update S2 += k⊗k⊗v given dS2 (symmetric), d-tiled."""
+    d = kc32.shape[-1]
+    dk_parts = []
+    dv = None
+    for t0, t in _tiles(d):
+        s2t = ds2[:, :, t0 : t0 + t]  # [b,k,T,e,v]
+        w = jnp.einsum("bkjv,bktev->bkjte", vc32, s2t)
+        dk_parts.append(2.0 * jnp.einsum("bkje,bkjte->bkjt", kc32, w))
+        w2 = jnp.einsum("bkje,bktev->bkjtv", kc32, s2t)
+        part = jnp.einsum("bkjt,bkjtv->bkjv", kc32[..., t0 : t0 + t], w2)
+        dv = part if dv is None else dv + part
+    return jnp.concatenate(dk_parts, axis=-1), dv
+
+
+def _ds2_accum(qc32, dnum, half_a2):
+    """half_a2 · Σ_{g,i} q⊗q⊗dnum -> [b,k,d,e,v], d-tiled."""
+    d = qc32.shape[-1]
+    parts = []
+    for t0, t in _tiles(d):
+        parts.append(
+            half_a2
+            * jnp.einsum(
+                "bkgct,bkgce,bkgcv->bktev", qc32[..., t0 : t0 + t], qc32, dnum
+            )
+        )
+    return jnp.concatenate(parts, axis=2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def taylor_chunked_core(q, k, v, cfg: TaylorConfig, chunk: int):
+    """Causal chunked Taylor attention on PRE-NORMALISED q/k.
+
+    q: [b, hk, g, n, d]; k: [b, hk, n, d]; v: [b, hk, n, dv].
+    Returns out [b, hk, g, n, dv].
+    """
+    out, _, _ = _forward(q, k, v, cfg, chunk)
+    return out
+
+
+def _chunk_axes(q, k, v, chunk):
+    from repro.distributed.api import constrain  # noqa: PLC0415
+
+    b, hk, g, n, d = q.shape
+    dv = v.shape[-1]
+    nc = n // chunk
+    qs = jnp.moveaxis(q.reshape(b, hk, g, nc, chunk, d), 3, 0)
+    ks = jnp.moveaxis(k.reshape(b, hk, nc, chunk, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, hk, nc, chunk, dv), 2, 0)
+    # chunk dim must stay replicated (scan slices it); heads over tp
+    qs = constrain(qs, None, "dp", "*", "*", "*", "*")
+    ks = constrain(ks, None, "dp", "*", "*", "*")
+    vs = constrain(vs, None, "dp", "*", "*", "*")
+    return qs, ks, vs, nc
+
+
+def _forward(q, k, v, cfg, chunk):
+    b, hk, g, n, d = q.shape
+    dv = v.shape[-1]
+    a = cfg.scale(d)
+    qs, ks, vs, nc = _chunk_axes(q, k, v, chunk)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    state0 = init_taylor_state(b, hk, d, dv, cfg)
+
+    def step(state, xs):
+        qc, kc, vc = xs
+        s = jnp.einsum("bkgid,bkjd->bkgij", qc, kc,
+                       preferred_element_type=jnp.float32) * a
+        p = jnp.where(mask, poly_scores(s, cfg), 0.0)
+        num = jnp.einsum("bkgij,bkjv->bkgiv", p, vc,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(p, axis=-1)
+        inum, iden = _chunk_inter(qc, state, cfg, a)
+        new_state = _state_update(state, kc, vc, cfg)
+        return new_state, (num + inum, den + iden)
+
+    final_state, (nums, dens) = jax.lax.scan(step, state0, (qs, ks, vs))
+    nums = jnp.moveaxis(nums, 0, 3).reshape(b, hk, g, n, dv)
+    dens = jnp.moveaxis(dens, 0, 3).reshape(b, hk, g, n)
+    out = _safe_div(nums, dens).astype(v.dtype)
+    return out, dens, final_state
+
+
+def _fwd_rule(q, k, v, cfg, chunk):
+    out = taylor_chunked_core(q, k, v, cfg, chunk)
+    return out, (q, k, v)
+
+
+def _bwd_rule(cfg, chunk, res, dout):
+    q, k, v = res
+    b, hk, g, n, d = q.shape
+    dv = v.shape[-1]
+    a = cfg.scale(d)
+    half_a2 = 0.5 * a * a
+    c0 = 0.0 if cfg.minus_one else 1.0
+    f32 = jnp.float32
+    qs, ks, vs, nc = _chunk_axes(q, k, v, chunk)
+    dos = jnp.moveaxis(
+        dout.astype(f32).reshape(b, hk, g, nc, chunk, dv), 3, 0
+    )
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    state0 = init_taylor_state(b, hk, d, dv, cfg)
+
+    # ---- pass 1: forward recompute.  emits dq + per-chunk dnum/dden. ----
+    def fwd_step(state, xs):
+        qc, kc, vc, doc = xs
+        qc32, kc32, vc32 = qc.astype(f32), kc.astype(f32), vc.astype(f32)
+        s = jnp.einsum("bkgid,bkjd->bkgij", qc32, kc32) * a
+        p = jnp.where(mask, poly_scores(s, cfg), 0.0)
+        num = jnp.einsum("bkgij,bkjv->bkgiv", p, vc32)
+        den = jnp.sum(p, axis=-1)
+        inum, iden = _chunk_inter(qc, state, cfg, a)
+        num, den = num + inum, den + iden
+        den = jnp.where(jnp.abs(den) < 1e-6, jnp.where(den < 0, -1e-6, 1e-6), den)
+        o = num / den[..., None]
+        dnum = doc / den[..., None]
+        dden = -jnp.sum(doc * o, axis=-1) / den
+
+        # intra-chunk gradients
+        dp = jnp.einsum("bkgiv,bkjv->bkgij", dnum, vc32) + dden[..., None]
+        ds = jnp.where(mask, dp * _poly_deriv(s, cfg), 0.0) * a
+        dq_c = jnp.einsum("bkgij,bkjd->bkgid", ds, kc32)
+
+        # inter-chunk gradients w.r.t. q (state S_{<c} is a constant here)
+        dq_c = dq_c + a * jnp.einsum("bkgiv,bkdv->bkgid", dnum, state.s1)
+        dq_c = dq_c + a * dden[..., None] * state.z1[:, :, None, None, :]
+        if cfg.order >= 2:
+            dq_c = dq_c + _dq_quad(qc32, dnum, state.s2, half_a2)
+            qz2 = jnp.einsum("bkgie,bkde->bkgid", qc32, state.z2)
+            dq_c = dq_c + (2.0 * half_a2) * dden[..., None] * qz2
+
+        new_state = _state_update(state, kc, vc, cfg)
+        return new_state, (dq_c, dnum, dden)
+
+    _, (dqs, dnums, ddens) = jax.lax.scan(
+        fwd_step, state0, (qs, ks, vs, dos)
+    )
+
+    # ---- pass 2: reverse.  carry future state-gradients; emit dk, dv. ----
+    dstate0 = init_taylor_state(b, hk, d, dv, cfg)  # zeros: d(loss)/d(state)
+
+    def rev_step(dstate, xs):
+        qc, kc, vc, doc, dnum, dden = xs
+        qc32, kc32, vc32 = qc.astype(f32), kc.astype(f32), vc.astype(f32)
+        s = jnp.einsum("bkgid,bkjd->bkgij", qc32, kc32) * a
+        p = jnp.where(mask, poly_scores(s, cfg), 0.0)
+        dp = jnp.einsum("bkgiv,bkjv->bkgij", dnum, vc32) + dden[..., None]
+        ds = jnp.where(mask, dp * _poly_deriv(s, cfg), 0.0) * a
+        # intra
+        dk_c = jnp.einsum("bkgij,bkgid->bkjd", ds, qc32)
+        dv_c = jnp.einsum("bkgij,bkgiv->bkjv", p, dnum)
+        # from future chunks' state use: S1 += kᵀv ; z1 += k ; s0 += v ; etc.
+        dv_c = dv_c + c0 * dstate.s0[:, :, None, :]
+        dv_c = dv_c + jnp.einsum("bkjd,bkdv->bkjv", kc32, dstate.s1)
+        dk_c = dk_c + jnp.einsum("bkjv,bkdv->bkjd", vc32, dstate.s1)
+        dk_c = dk_c + dstate.z1[:, :, None, :]
+        if cfg.order >= 2:
+            dk_s2, dv_s2 = _dk_dv_from_ds2(kc32, vc32, dstate.s2)
+            dk_c = dk_c + dk_s2
+            dv_c = dv_c + dv_s2
+            dk_c = dk_c + 2.0 * jnp.einsum("bkje,bkde->bkjd", kc32, dstate.z2)
+
+        # accumulate THIS chunk's contribution to the state gradient (the
+        # inter-chunk read used S_{<c}: its gradient flows to earlier chunks)
+        new = TaylorState(
+            n0=dstate.n0 + c0 * jnp.sum(dden, axis=(2, 3)),
+            s0=dstate.s0 + c0 * jnp.sum(dnum, axis=(2, 3)),
+            z1=dstate.z1 + a * jnp.einsum("bkgi,bkgid->bkd", dden, qc32),
+            s1=dstate.s1 + a * jnp.einsum("bkgid,bkgiv->bkdv", qc32, dnum),
+            z2=None,
+            s2=None,
+        )
+        if cfg.order >= 2:
+            qq_dden = half_a2 * jnp.einsum(
+                "bkgi,bkgid,bkgie->bkde", dden, qc32, qc32
+            )
+            qq_dnum = _ds2_accum(qc32, dnum, half_a2)
+            new = new._replace(z2=dstate.z2 + qq_dden, s2=dstate.s2 + qq_dnum)
+        return new, (dk_c, dv_c)
+
+    _, (dks, dvs) = jax.lax.scan(
+        rev_step, dstate0, (qs, ks, vs, dos, dnums, ddens), reverse=True
+    )
+
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(b, hk, g, n, d).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 2).reshape(b, hk, n, d).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(b, hk, n, dv).astype(v.dtype)
+    return dq, dk, dv
+
+
+taylor_chunked_core.defvjp(_fwd_rule, _bwd_rule)

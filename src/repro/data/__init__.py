@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic, stateless, shardable synthetic corpora."""
+
+from repro.data.synthetic import SyntheticTask, make_task
+
+__all__ = ["SyntheticTask", "make_task"]

@@ -1,0 +1,21 @@
+"""Distributed runtime: logical sharding rules, param specs, compression."""
+
+from repro.distributed.api import (
+    DEFAULT_RULES,
+    SINGLE_POD_RULES,
+    constrain,
+    logical_to_spec,
+    mesh_axis_size,
+    rules_for_mesh,
+    sharding_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "SINGLE_POD_RULES",
+    "constrain",
+    "logical_to_spec",
+    "mesh_axis_size",
+    "rules_for_mesh",
+    "sharding_rules",
+]

@@ -1,0 +1,203 @@
+"""Parameter / optimizer-state / cache PartitionSpec derivation.
+
+Rules are written on *path suffixes* and *trailing dims* so one table covers
+stacked ([L, ...] scan params), tail (unstacked) and shared blocks.  Every
+rule is resolved **divisibility-aware**: a logical axis is dropped (or moved
+to an alternate dim) when the dim size is not divisible by the physical axis
+size — this is what lets the same table serve MQA (kv=1), GQA (kv=2/8),
+MHA, tiny test configs and the 1T MoE without per-arch special-casing.
+
+Logical axes (bound to physical axes by distributed.api rules):
+  fsdp — parameter sharding (ZeRO-3-style; all-gathered per layer in scan)
+  tp   — tensor parallel (heads / ffn / vocab)
+  ep   — expert parallel (same physical axis as tp by default)
+  dp   — batch (activations / caches only)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.api import Rules, mesh_axis_size
+
+# (path-suffix regex, trailing-dim logical axes).  First match wins.
+# "tp|last" means: put tp on this dim if divisible, else try the last dim.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(embed|unembed)\.w$", ("tp", "fsdp")),
+    (r"pos_embed$", (None, "tp")),
+    (r"vision_proj\.w$", (None, "tp")),
+    (r"experts\.(w_gate|w_up)$", ("ep", "fsdp", None)),
+    (r"experts\.w_down$", ("ep", None, "fsdp")),
+    (r"experts\.(b_up)$", ("ep", None)),
+    (r"experts\.(b_down)$", ("ep", None)),
+    (r"router\.w$", ("fsdp", None)),
+    (r"wq\.w$", ("fsdp", "tp", None)),
+    (r"(wk|wv)\.w$", ("fsdp", "tp", None)),
+    (r"(wq|wk|wv)\.b$", ("tp", None)),
+    (r"wo\.w$", ("tp", None, "fsdp")),
+    (r"(w_gate|w_up)$", ("fsdp", "tp")),
+    (r"w_down$", ("tp", "fsdp")),
+    (r"b_up$", ("tp",)),
+    (r"b_down$", (None,)),
+    (r"in_proj\.w$", ("fsdp", "tp")),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"(A_log|D|dt_bias)$", ("tp",)),
+    (r"out_proj\.w$", ("tp", "fsdp")),
+    (r"gate_norm\.scale$", ("tp",)),
+    # norms & anything else: replicated
+)
+
+
+def _norm_path(path) -> str:
+    s = jax.tree_util.keystr(path)
+    s = re.sub(r"\[['\"]?([^'\"\]]+)['\"]?\]", r".\1", s)
+    return s.lstrip(".")
+
+
+def _resolve_dim(
+    logical: Optional[str], size: int, rules: Rules, mesh: Mesh
+) -> Optional[Any]:
+    """Physical axis (or tuple) for one dim, or None if off/indivisible."""
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    if phys is None:
+        return None
+    if size % mesh_axis_size(mesh, phys) != 0:
+        return None
+    return phys
+
+
+def spec_for(path_str: str, shape: Sequence[int], rules: Rules, mesh: Mesh) -> P:
+    for pattern, logical_axes in PARAM_RULES:
+        if re.search(pattern, path_str):
+            n_lead = len(shape) - len(logical_axes)
+            if n_lead < 0:
+                continue  # rule written for more dims than this param has
+            entries: list = [None] * n_lead
+            used = set()
+            for logical, size in zip(logical_axes, shape[n_lead:]):
+                phys = _resolve_dim(logical, size, rules, mesh)
+                if phys is not None and phys in used:
+                    phys = None  # one physical axis may appear only once
+                if phys is not None:
+                    used.add(phys)
+                entries.append(phys)
+            return P(*entries)
+    return P()  # replicated
+
+
+def param_specs(params_shapes: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Pytree of PartitionSpec mirroring a pytree of ShapeDtypeStruct."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [spec_for(_norm_path(p), l.shape, rules, mesh) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs: mirror the param spec tree structurally.
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(opt_state_shapes: Any, pspecs: Any, params_shapes: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Derive specs for optimizer state by shape-matching against params.
+
+    Works for any of our optimizers: a state leaf whose shape equals the
+    corresponding param's shape inherits its spec; a factored/absent leaf
+    (adafactor row/col, disabled momentum placeholders, scalar step) gets a
+    sliced or replicated spec."""
+    p_flat = {(_norm_path(p)): (l.shape, s) for (p, l), s in zip(
+        jax.tree_util.tree_flatten_with_path(params_shapes)[0],
+        jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P)),
+    )}
+
+    def suffix_match(path_str: str, ppath: str) -> Optional[str]:
+        """Return the factored-field suffix ("row"/"col"/"full"/"") if ppath
+        is a dot-boundary suffix of path_str (possibly + field), else None."""
+        for field in ("", ".row", ".col", ".full"):
+            cand = ppath + field
+            if path_str == cand or path_str.endswith("." + cand):
+                return field.lstrip(".")
+        return None
+
+    def match(path, leaf):
+        path_str = _norm_path(path)
+        # strip the optimizer-state prefix (".m", ".v", field indices …) by
+        # searching for a param path that is a dot-boundary suffix of this path.
+        for ppath, (pshape, pspec) in p_flat.items():
+            field = suffix_match(path_str, ppath)
+            if field is not None:
+                if leaf.shape == pshape:
+                    return pspec
+                if field == "row" and leaf.shape == pshape[:-1]:
+                    return P(*tuple(pspec)[:-1]) if len(pspec) else P()
+                if field == "col" and leaf.shape == pshape[:-2] + pshape[-1:]:
+                    t = tuple(pspec)
+                    return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P()
+                return P()  # placeholder / scalar
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_shapes)
+    specs = [match(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache specs by shape heuristics.
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Inputs: dim0 = batch -> dp (when divisible); rest replicated."""
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        phys = _resolve_dim("dp", leaf.shape[0], rules, mesh)
+        return P(phys, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh, rules: Rules, batch: int) -> Any:
+    """Decode caches.  Leaves are [b, heads, ...] (tail caches) or
+    [n_layers, b, heads, ...] (group caches stacked by lm_prefill's scan) —
+    located by matching ``batch``.  dp goes on the batch dim, tp on the
+    heads dim right after it, with a divisibility fallback to the LAST dim
+    (e.g. MQA taylor states shard their d_v dim instead)."""
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        shape = leaf.shape
+        entries: list = [None] * len(shape)
+        # batch dim: 0 (tail caches), 1/2 (group caches stacked
+        # [n_groups, run_len, b, ...] by lm_prefill's nested scans)
+        for b_idx in (0, 1, 2):
+            if len(shape) > b_idx and shape[b_idx] == batch:
+                break
+        else:
+            return P(*entries)
+        entries[b_idx] = _resolve_dim("dp", shape[b_idx], rules, mesh)
+        h_idx = b_idx + 1
+        if len(shape) > h_idx:
+            tp = _resolve_dim("tp", shape[h_idx], rules, mesh)
+            if tp is not None:
+                entries[h_idx] = tp
+            elif len(shape) > h_idx + 1:
+                entries[-1] = _resolve_dim("tp", shape[-1], rules, mesh)
+        return P(*entries)
+
+    return jax.tree_util.tree_map(one, cache_shapes)

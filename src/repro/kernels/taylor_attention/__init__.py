@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for chunked causal Taylor (order-2) linear attention."""
+
+from repro.kernels.taylor_attention.ops import taylor_attention_kernel
+
+__all__ = ["taylor_attention_kernel"]

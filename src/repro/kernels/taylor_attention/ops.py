@@ -1,0 +1,130 @@
+"""Jit'd wrapper around the Taylor-attention Pallas kernel.
+
+Handles everything the raw kernel does not:
+  * LayerNorm (no affine) of q/k — the paper's prescription;
+  * GQA reshaping ([b, h, n, d] + [b, hk, n, d] -> grouped kernel layout);
+  * zero-padding of the head dim to the 128-lane requirement and of the
+    sequence to the chunk size (zero features are exact no-ops: they add 0
+    to every dot product and moment — see kernel.py docstring);
+  * training gradients: a custom VJP whose backward is the exact
+    FlashLinearAttention-style two-pass recompute (core/taylor_vjp math);
+    the Pallas kernel accelerates the forward, the backward runs the XLA
+    chunked path (a Pallas backward kernel is a further §Perf iteration).
+
+On this CPU container the kernel runs under ``interpret=True`` (validated
+against ref.py in tests/test_kernels.py); on TPU the same code lowers to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_map import TaylorConfig, layernorm_no_affine
+from repro.kernels.taylor_attention.kernel import DEFAULT_CHUNK, taylor_fwd_pallas
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    size = x.shape[axis]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "order", "chunk", "interpret", "normalize_qk")
+)
+def taylor_attention_kernel(
+    q: Array,  # [b, h, n, d]
+    k: Array,  # [b, hk, n, d]
+    v: Array,  # [b, hk, n, dv]
+    alpha: float = 3.0,
+    order: int = 2,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+    normalize_qk: bool = True,
+) -> Array:
+    """Causal Taylor linear attention via the Pallas kernel.  Output
+    [b, h, n, dv]."""
+    b, h, n, d = q.shape
+    hk = k.shape[1]
+    dv = v.shape[-1]
+    g = h // hk
+    if normalize_qk:
+        q = layernorm_no_affine(q).astype(q.dtype)
+        k = layernorm_no_affine(k).astype(k.dtype)
+
+    # NOTE: the scale uses the TRUE head dim d (pre-padding).
+    alpha_eff = alpha * (d**0.5) / 128.0**0.5 if d != 128 else alpha
+
+    qg = q.reshape(b, hk, g, n, d)
+    # pad: head dim -> 128 lanes; seq -> chunk multiple; dv -> 128 lanes
+    qg = _pad_to(_pad_to(qg, 4, 128), 3, chunk)
+    kp = _pad_to(_pad_to(k, 3, 128), 2, chunk)
+    vp = _pad_to(_pad_to(v, 3, 128), 2, chunk)
+    n_pad = qg.shape[3]
+    d_pad = qg.shape[4]
+    dv_pad = vp.shape[3]
+
+    out = taylor_fwd_pallas(
+        qg.reshape(b * hk, g, n_pad, d_pad),
+        kp.reshape(b * hk, n_pad, d_pad),
+        vp.reshape(b * hk, n_pad, dv_pad),
+        alpha=alpha_eff,
+        order=order,
+        chunk=chunk,
+        dv_tile=min(dv_pad, 128),
+        interpret=interpret,
+    )
+    out = out.reshape(b, hk, g, n_pad, dv_pad)[:, :, :, :n, :dv]
+    return out.reshape(b, h, n, dv)
+
+
+def taylor_attention_kernel_trainable(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: Optional[TaylorConfig] = None,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> Array:
+    """Differentiable wrapper: Pallas forward + exact two-pass XLA backward
+    (core/taylor_vjp)."""
+    cfg = cfg or TaylorConfig()
+
+    @jax.custom_vjp
+    def fwd(q, k, v):
+        return taylor_attention_kernel(
+            q, k, v, alpha=cfg.alpha, order=cfg.order, chunk=chunk,
+            interpret=interpret, normalize_qk=False,
+        )
+
+    def fwd_rule(q, k, v):
+        return fwd(q, k, v), (q, k, v)
+
+    def bwd_rule(res, dout):
+        from repro.core.taylor_vjp import _bwd_rule  # noqa: PLC0415
+
+        q, k, v = res
+        b, h, n, d = q.shape
+        hk = k.shape[1]
+        qg = q.reshape(b, hk, h // hk, n, d)
+        dog = dout.reshape(b, hk, h // hk, n, v.shape[-1])
+        dq, dk, dv = _bwd_rule(cfg, chunk, (qg, k, v), dog)
+        return dq.reshape(q.shape), dk, dv
+
+    fwd.defvjp(fwd_rule, bwd_rule)
+
+    if cfg.normalize_qk:
+        q = layernorm_no_affine(q).astype(q.dtype)
+        k = layernorm_no_affine(k).astype(k.dtype)
+    return fwd(q, k, v)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Taylor-attention kernel (self-contained).
+
+Semantics: causal order-``order`` Taylor linear attention over
+PRE-NORMALISED q/k (LayerNorm is the caller's job, matching the kernel),
+with GQA grouping and the normalising denominator.
+
+  q: [B, HK, G, N, D]   k: [B, HK, N, D]   v: [B, HK, N, DV]
+  out: [B, HK, G, N, DV]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def taylor_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    alpha: float = 3.0,
+    order: int = 2,
+) -> jax.Array:
+    b, hk, g, n, d = q.shape
+    a = 1.0 / (alpha * d**0.5)
+    s = jnp.einsum(
+        "bkgid,bkjd->bkgij", q, k, preferred_element_type=jnp.float32
+    ) * a
+    p = 1.0 + s
+    if order >= 2:
+        p = p + 0.5 * jnp.square(s)
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    p = jnp.where(mask, p, 0.0)
+    num = jnp.einsum("bkgij,bkjv->bkgiv", p, v, preferred_element_type=jnp.float32)
+    den = jnp.sum(p, axis=-1)
+    den = jnp.where(jnp.abs(den) < 1e-6, 1e-6, den)
+    return (num / den[..., None]).astype(v.dtype)

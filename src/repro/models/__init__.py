@@ -1,0 +1,16 @@
+"""Model zoo: composable blocks + assembled architectures."""
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig, count_active_params, count_params
+from repro.models.lm import lm_apply, lm_decode_step, lm_init, lm_prefill
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "count_active_params",
+    "count_params",
+    "lm_apply",
+    "lm_decode_step",
+    "lm_init",
+    "lm_prefill",
+]

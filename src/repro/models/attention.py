@@ -1,0 +1,300 @@
+"""GQA attention block with selectable backend (the paper's taylor attention
+as a first-class choice), plus prefill/decode cache management.
+
+Backends ("softmax" | "taylor" | "linear_elu"):
+  * softmax    — exact; flash-style scan for long sequences; KV cache decode.
+  * taylor     — the paper's order-2 Taylor linear attention; chunked scan
+                 for training/prefill, O(1) TaylorState for decode.
+  * linear_elu — Katharopoulos elu+1 baseline (paper's comparison point).
+
+Shapes follow [b, n, d] activations; heads are [b, h, n, hd] internally.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    TaylorConfig,
+    TaylorState,
+    flash_softmax_attention,
+    init_taylor_state,
+    linear_attention,
+    softmax_attention,
+    softmax_decode_step,
+    taylor_attention,
+    taylor_attention_chunked,
+    taylor_attention_noncausal,
+    taylor_decode_step,
+)
+from repro.distributed.api import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    """Ring-less fixed-capacity KV cache (softmax backend)."""
+
+    k: Array  # [b, hk, n_max, hd]
+    v: Array  # [b, hk, n_max, hd]
+    length: Array  # scalar int32 — tokens written
+
+
+AttnCache = Union[KVCache, TaylorState]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, h, hd), bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], (d, hk, hd), bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], (d, hk, hd), bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], (h, hd, d), in_axes=2, dtype=dtype),
+    }
+    return params
+
+
+def _project_q(params, x: Array, cfg: ModelConfig, positions: Optional[Array]):
+    dtype = x.dtype
+    q = jnp.einsum("bnd,dhk->bhnk", x, params["wq"]["w"].astype(dtype))
+    if "b" in params["wq"]:
+        q = q + params["wq"]["b"].astype(dtype)[None, :, None, :]
+    if cfg.pos == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    if cfg.attn_sharding == "cp":
+        # context parallelism: heads replicated, sequence over the TP group
+        return constrain(q, "dp", None, "sp", None)
+    return constrain(q, "dp", "tp", None, None)
+
+
+def _project_kv(params, x: Array, cfg: ModelConfig, positions: Optional[Array]):
+    dtype = x.dtype
+    k = jnp.einsum("bnd,dhk->bhnk", x, params["wk"]["w"].astype(dtype))
+    v = jnp.einsum("bnd,dhk->bhnk", x, params["wv"]["w"].astype(dtype))
+    if "b" in params["wk"]:
+        k = k + params["wk"]["b"].astype(dtype)[None, :, None, :]
+        v = v + params["wv"]["b"].astype(dtype)[None, :, None, :]
+    if cfg.pos == "rope" and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _out_proj(params, o: Array, x_dtype) -> Array:
+    y = jnp.einsum("bhnk,hkd->bnd", o.astype(x_dtype), params["wo"]["w"].astype(x_dtype))
+    return constrain(y, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence apply (training / encoder / parallel prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention_apply(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Optional[Array] = None,
+    causal: bool = True,
+    kv_src: Optional[Array] = None,
+) -> Array:
+    """Self-attention (kv_src=None) or cross-attention (kv_src=[b,m,d])."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    cross = kv_src is not None
+    q = _project_q(params, x, cfg, None if cross else positions)
+    src = kv_src if cross else x
+    kv_pos = None if cross else positions
+    k, v = _project_kv(params, src, cfg, kv_pos)
+
+    backend = cfg.attention
+    if backend == "taylor":
+        if causal and not cross:
+            o = None
+            if cfg.attn_sharding == "cp":
+                from repro.core.context_parallel import (  # noqa: PLC0415
+                    taylor_attention_context_parallel,
+                )
+                from repro.distributed import api as dist  # noqa: PLC0415
+
+                ctx = dist.active()
+                if ctx is not None:
+                    mesh, rules = ctx
+                    seq_ax = rules.get("sp") or rules.get("tp")
+                    n = q.shape[2]
+                    if seq_ax is not None and n % (
+                        dist.mesh_axis_size(mesh, seq_ax) * cfg.attn_chunk
+                    ) == 0:
+                        o = taylor_attention_context_parallel(
+                            q, k, v, cfg.taylor, mesh, seq_ax,
+                            chunk=cfg.attn_chunk, dp_axis=rules.get("dp"),
+                        )
+            if o is None:
+                o = taylor_attention(
+                    q, k, v, cfg.taylor, causal=True, chunk=cfg.attn_chunk
+                )
+        else:
+            o = taylor_attention_noncausal(q, k, v, cfg.taylor)
+    elif backend == "linear_elu":
+        o = linear_attention(q, k, v, causal=causal and not cross)
+    elif backend == "softmax":
+        n = k.shape[2]
+        if n > 2048 and n % cfg.attn_chunk == 0:
+            o = flash_softmax_attention(
+                q, k, v, causal=causal and not cross, chunk=max(cfg.attn_chunk, 512)
+            )
+        else:
+            o = softmax_attention(q, k, v, causal=causal and not cross)
+    else:
+        raise ValueError(f"unknown attention backend {backend!r}")
+    return _out_proj(params, o, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also returns a decode cache.
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, n_max: int, dtype=jnp.bfloat16) -> AttnCache:
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.attention == "taylor":
+        return init_taylor_state(batch, hk, hd, hd, cfg.taylor)
+    z = jnp.zeros((batch, hk, n_max, hd), dtype)
+    return KVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+
+
+def attention_prefill(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    n_max: int,
+    positions: Optional[Array] = None,
+) -> Tuple[Array, AttnCache]:
+    """Causal self-attention over the prompt, returning (y, cache)."""
+    b, n, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(n)
+    q = _project_q(params, x, cfg, positions)
+    k, v = _project_kv(params, x, cfg, positions)
+
+    if cfg.attention == "taylor":
+        if n % cfg.attn_chunk == 0 and n > cfg.attn_chunk:
+            o, state = taylor_attention_chunked(
+                q, k, v, cfg.taylor, chunk=cfg.attn_chunk, return_state=True
+            )
+        else:
+            from repro.core.taylor import _norm_qk, _state_update  # noqa: PLC0415
+
+            o = taylor_attention(q, k, v, cfg.taylor, causal=True)
+            qn, kn = _norm_qk(q, k, cfg.taylor)
+            state = init_taylor_state(b, k.shape[1], q.shape[-1], v.shape[-1], cfg.taylor)
+            state = _state_update(state, kn, v, cfg.taylor)
+        return _out_proj(params, o, x.dtype), state
+
+    # softmax / linear_elu: KV cache
+    if cfg.attention == "linear_elu":
+        o = linear_attention(q, k, v, causal=True)
+    elif n > 2048 and n % cfg.attn_chunk == 0:
+        o = flash_softmax_attention(q, k, v, causal=True, chunk=max(cfg.attn_chunk, 512))
+    else:
+        o = softmax_attention(q, k, v, causal=True)
+    o = _out_proj(params, o, x.dtype)
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache_k = jnp.zeros((b, hk, n_max, hd), k.dtype).at[:, :, :n].set(k)
+    cache_v = jnp.zeros((b, hk, n_max, hd), v.dtype).at[:, :, :n].set(v)
+    return o, KVCache(k=cache_k, v=cache_v, length=jnp.asarray(n, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the cache.
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(
+    params,
+    x_t: Array,  # [b, d]
+    cache: AttnCache,
+    cfg: ModelConfig,
+    pos: Array,  # scalar int32: 0-based position of this token
+) -> Tuple[Array, AttnCache]:
+    b, d = x_t.shape
+    dtype = x_t.dtype
+    q = jnp.einsum("bd,dhk->bhk", x_t, params["wq"]["w"].astype(dtype))
+    k = jnp.einsum("bd,dhk->bhk", x_t, params["wk"]["w"].astype(dtype))
+    v = jnp.einsum("bd,dhk->bhk", x_t, params["wv"]["w"].astype(dtype))
+    if "b" in params["wq"]:
+        q = q + params["wq"]["b"].astype(dtype)
+        k = k + params["wk"]["b"].astype(dtype)
+        v = v + params["wv"]["b"].astype(dtype)
+    if cfg.pos == "rope":
+        q = apply_rope(q[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0, :]
+        k = apply_rope(k[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0, :]
+
+    if cfg.attention == "taylor":
+        o, cache = taylor_decode_step(cache, q, k, v, cfg.taylor)
+    else:
+        new_k = jax.lax.dynamic_update_index_in_dim(cache.k, k.astype(cache.k.dtype), pos, 2)
+        new_v = jax.lax.dynamic_update_index_in_dim(cache.v, v.astype(cache.v.dtype), pos, 2)
+        cache = KVCache(k=new_k, v=new_v, length=pos + 1)
+        o = softmax_decode_step(q, cache.k, cache.v, cache.length)
+
+    y = jnp.einsum("bhk,hkd->bd", o.astype(dtype), params["wo"]["w"].astype(dtype))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention caches (encoder-decoder / VLM): precompute once.
+# ---------------------------------------------------------------------------
+
+
+class CrossCache(NamedTuple):
+    """Precomputed cross-attention source: either projected K/V (softmax) or
+    the global TaylorState (taylor backend)."""
+
+    kv: AttnCache
+
+
+def cross_prefill(params, kv_src: Array, cfg: ModelConfig) -> CrossCache:
+    k, v = _project_kv(params, kv_src, cfg, None)
+    if cfg.attention == "taylor":
+        from repro.core.taylor import _norm_qk, _state_update  # noqa: PLC0415
+
+        _, kn = _norm_qk(k, k, cfg.taylor)
+        state = init_taylor_state(
+            k.shape[0], k.shape[1], k.shape[-1], v.shape[-1], cfg.taylor
+        )
+        return CrossCache(kv=_state_update(state, kn, v, cfg.taylor))
+    return CrossCache(kv=KVCache(k=k, v=v, length=jnp.asarray(k.shape[2], jnp.int32)))
+
+
+def cross_decode(params, x_t: Array, cache: CrossCache, cfg: ModelConfig) -> Array:
+    b, d = x_t.shape
+    dtype = x_t.dtype
+    q = jnp.einsum("bd,dhk->bhk", x_t, params["wq"]["w"].astype(dtype))
+    if "b" in params["wq"]:
+        q = q + params["wq"]["b"].astype(dtype)
+    if cfg.attention == "taylor":
+        from repro.core.feature_map import layernorm_no_affine  # noqa: PLC0415
+        from repro.core.taylor import _chunk_inter, _safe_div  # noqa: PLC0415
+
+        state: TaylorState = cache.kv
+        hk = state.z1.shape[1]
+        if cfg.taylor.normalize_qk:
+            q = layernorm_no_affine(q).astype(q.dtype)
+        qg = q.reshape(b, hk, q.shape[1] // hk, 1, q.shape[-1])
+        num, den = _chunk_inter(qg, state, cfg.taylor, cfg.taylor.scale(q.shape[-1]))
+        o = _safe_div(num, den)[:, :, :, 0, :].reshape(b, q.shape[1], -1)
+    else:
+        kv: KVCache = cache.kv
+        o = softmax_decode_step(q, kv.k, kv.v, kv.length)
+    return jnp.einsum("bhk,hkd->bd", o.astype(dtype), params["wo"]["w"].astype(dtype))

@@ -1,0 +1,198 @@
+"""Block-kind dispatcher: init / full-sequence apply / prefill / decode for
+every kind in ModelConfig.pattern ("attn", "moe", "mamba", "shared_attn",
+"cross").  models/lm.py scans these over the depth dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+Array = jax.Array
+
+
+def block_init(key, kind: str, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "shared_attn"):
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.attention_init(ks[0], cfg, dtype),
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        }
+    if kind == "moe":
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.attention_init(ks[0], cfg, dtype),
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            "moe": moe_mod.moe_init(ks[1], cfg, dtype),
+        }
+    if kind == "mamba":
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "mamba": ssm.mamba_init(ks[0], cfg, dtype),
+        }
+    if kind == "cross":
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": attn.attention_init(ks[0], cfg, dtype),
+            "norm_c": norm_init(cfg.d_model, cfg.norm, dtype),
+            "cross": attn.attention_init(ks[1], cfg, dtype),
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_apply(
+    params,
+    kind: str,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Optional[Array] = None,
+    kv_src: Optional[Array] = None,
+    causal: bool = True,
+) -> Tuple[Array, Array]:
+    """Full-sequence forward.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if kind in ("attn", "shared_attn", "moe", "cross"):
+        h = norm_apply(params["norm1"], x, cfg.norm, eps)
+        x = x + attn.attention_apply(params["attn"], h, cfg, positions, causal=causal)
+        if kind == "cross":
+            h = norm_apply(params["norm_c"], x, cfg.norm, eps)
+            x = x + attn.attention_apply(
+                params["cross"], h, cfg, positions, causal=False, kv_src=kv_src
+            )
+        h = norm_apply(params["norm2"], x, cfg.norm, eps)
+        if kind == "moe":
+            y, aux = moe_mod.moe_apply(params["moe"], h, cfg)
+            x = x + y
+        else:
+            x = x + mlp_apply(params["mlp"], h, cfg.act)
+        return x, aux
+    if kind == "mamba":
+        h = norm_apply(params["norm1"], x, cfg.norm, eps)
+        x = x + ssm.mamba_apply(params["mamba"], h, cfg, chunk=cfg.attn_chunk)
+        return x, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(
+    params,
+    kind: str,
+    x: Array,
+    cfg: ModelConfig,
+    n_max: int,
+    positions: Optional[Array] = None,
+    kv_src: Optional[Array] = None,
+):
+    """Returns (x, cache).  Cache structure per kind:
+      attn/shared_attn/moe: AttnCache
+      mamba:                MambaCache
+      cross:                (AttnCache, CrossCache)
+    """
+    eps = cfg.norm_eps
+    if kind == "mamba":
+        # recompute-free streaming state: run the full apply then rebuild the
+        # final state from a chunked pass with return_state.
+        h = norm_apply(params["norm1"], x, cfg.norm, eps)
+        y, cache = _mamba_prefill(params["mamba"], h, cfg)
+        return x + y, cache
+    h = norm_apply(params["norm1"], x, cfg.norm, eps)
+    y, cache = attn.attention_prefill(params["attn"], h, cfg, n_max, positions)
+    x = x + y
+    if kind == "cross":
+        hc = norm_apply(params["norm_c"], x, cfg.norm, eps)
+        ccache = attn.cross_prefill(params["cross"], kv_src, cfg)
+        x = x + _cross_apply_full(params["cross"], hc, kv_src, cfg)
+        h2 = norm_apply(params["norm2"], x, cfg.norm, eps)
+        x = x + mlp_apply(params["mlp"], h2, cfg.act)
+        return x, (cache, ccache)
+    h2 = norm_apply(params["norm2"], x, cfg.norm, eps)
+    if kind == "moe":
+        y, _ = moe_mod.moe_apply(params["moe"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp_apply(params["mlp"], h2, cfg.act)
+    return x, cache
+
+
+def _cross_apply_full(params, h: Array, kv_src: Array, cfg: ModelConfig) -> Array:
+    return attn.attention_apply(params, h, cfg, None, causal=False, kv_src=kv_src)
+
+
+def _mamba_prefill(params, h: Array, cfg: ModelConfig):
+    """Like ssm.mamba_apply but returns the streaming cache."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    gN = s.n_groups * s.d_state
+    b, n, _ = h.shape
+    dtype = h.dtype
+    zxbcdt = jnp.einsum("bnd,dk->bnk", h, params["in_proj"]["w"].astype(dtype))
+    z, xbc, dt = ssm._split_proj(s, d, zxbcdt)
+    conv_tail = xbc[:, -(s.conv_width - 1) :, :] if s.conv_width > 1 else xbc[:, :0, :]
+    xbc, _ = ssm._causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, n, nh, s.head_dim)
+    B = xbc[..., di : di + gN].reshape(b, n, s.n_groups, s.d_state)
+    C = xbc[..., di + gN :].reshape(b, n, s.n_groups, s.d_state)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = cfg.attn_chunk if n % cfg.attn_chunk == 0 else n
+    y, h_state = ssm._ssd_chunked(xs, dtf, A, B, C, chunk, return_state=True)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, n, di).astype(dtype)
+    y = norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    y = jnp.einsum("bnk,kd->bnd", y, params["out_proj"]["w"].astype(dtype))
+    return y, ssm.MambaCache(conv=conv_tail, ssd=h_state)
+
+
+def block_decode(
+    params,
+    kind: str,
+    x_t: Array,  # [b, d]
+    cache: Any,
+    cfg: ModelConfig,
+    pos: Array,
+):
+    """One-token step.  Returns (x_t, new_cache)."""
+    eps = cfg.norm_eps
+    if kind == "mamba":
+        h = norm_apply(params["norm1"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+        y, cache = ssm.mamba_decode_step(params["mamba"], h, cache, cfg)
+        return x_t + y, cache
+    if kind == "cross":
+        acache, ccache = cache
+        h = norm_apply(params["norm1"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+        y, acache = attn.attention_decode(params["attn"], h, acache, cfg, pos)
+        x_t = x_t + y
+        hc = norm_apply(params["norm_c"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+        x_t = x_t + attn.cross_decode(params["cross"], hc, ccache, cfg)
+        h2 = norm_apply(params["norm2"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+        x_t = x_t + mlp_apply(params["mlp"], h2, cfg.act)
+        return x_t, (acache, ccache)
+    h = norm_apply(params["norm1"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+    y, cache = attn.attention_decode(params["attn"], h, cache, cfg, pos)
+    x_t = x_t + y
+    h2 = norm_apply(params["norm2"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
+    if kind == "moe":
+        y2, _ = moe_mod.moe_apply(params["moe"], h2[:, None, :], cfg)
+        x_t = x_t + y2[:, 0, :]
+    else:
+        x_t = x_t + mlp_apply(params["mlp"], h2, cfg.act)
+    return x_t, cache

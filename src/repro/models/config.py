@@ -1,0 +1,229 @@
+"""Model configuration dataclasses shared by the model zoo, configs/, launch/.
+
+A model is a repeating ``pattern`` of blocks scanned ``n_groups`` times plus an
+optional ``tail`` pattern — this keeps the HLO size O(1) in depth (compile
+time matters at 512-way SPMD) while expressing dense, MoE, SSM, hybrid
+(shared-block), encoder-decoder and cross-attention architectures uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.feature_map import TaylorConfig
+
+# Block kinds usable in patterns:
+#   "attn"        self-attention + MLP (dense FFN)
+#   "moe"         self-attention + MoE FFN
+#   "mamba"       Mamba2 (SSD) block
+#   "shared_attn" self-attention + MLP with weights SHARED across occurrences
+#   "cross"       self-attention + cross-attention + MLP (decoder / VLM layers)
+BLOCK_KINDS = ("attn", "moe", "mamba", "shared_attn", "cross")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0           # total shared-expert hidden size
+    capacity_factor: float = 1.25  # for the EP dispatch path
+    router_noise: float = 0.0
+    impl: str = "auto"             # "dense" | "ep" | "ep_a2a" | "auto"
+    a2a_quant: str = "none"        # "none" | "int8" — quantize fwd dispatch
+                                   # buffers (straight-through grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64             # P — SSD head channel dim
+    conv_width: int = 4
+    n_groups: int = 1              # B/C groups (GQA analogue)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_ssm_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # "lm" | "encdec" | "vlm"
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # depth = n_groups * len(pattern) + len(tail)
+    pattern: Tuple[str, ...]
+    n_groups: int
+    tail: Tuple[str, ...] = ()
+
+    head_dim: int = 0              # 0 → d_model // n_heads
+    act: str = "silu"              # "silu" | "geglu" | "gelu"
+    norm: str = "rmsnorm"          # "rmsnorm" | "layernorm"
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    pos: str = "rope"              # "rope" | "learned" | "sinusoidal" | "none"
+    rope_theta: float = 10000.0
+    embed_scale: bool = False      # gemma-style sqrt(d_model) embedding scale
+    logit_softcap: float = 0.0
+
+    # --- attention backend (the paper's technique is a first-class choice) ---
+    attention: str = "softmax"     # "softmax" | "taylor" | "linear_elu"
+    taylor: TaylorConfig = TaylorConfig()
+    attn_chunk: int = 128          # chunk for taylor/flash scan paths
+    # "tp": shard heads over the model axis (megatron-style).
+    # "cp": context parallelism — shard the SEQUENCE over the model axis and
+    #       exchange only the O(d²·d_v) moment state (taylor backend only;
+    #       the state-sum property is unique to linear attention).
+    attn_sharding: str = "tp"
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- encoder-decoder (whisper) ---
+    n_encoder_groups: int = 0
+    encoder_pattern: Tuple[str, ...] = ()
+    n_audio_ctx: int = 0           # stubbed conv-frontend output length
+
+    # --- vlm ---
+    n_image_tokens: int = 0
+    vision_dim: int = 0
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"        # activation dtype
+    param_dtype: str = "float32"
+    remat: str = "full"            # "none" | "full" | "dots_saveable"
+    max_seq: int = 131072
+
+    def __post_init__(self):
+        for kind in self.pattern + self.tail + self.encoder_pattern:
+            if kind not in BLOCK_KINDS:
+                raise ValueError(f"unknown block kind {kind!r}")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_groups * len(self.pattern) + len(self.tail)
+
+    @property
+    def n_encoder_layers(self) -> int:
+        return self.n_encoder_groups * len(self.encoder_pattern)
+
+    @property
+    def is_attention_free(self) -> bool:
+        kinds = set(self.pattern) | set(self.tail)
+        return kinds <= {"mamba"}
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode cost/state is O(1) in context length: SSM blocks
+        and/or the paper's taylor attention."""
+        return self.is_attention_free or self.attention == "taylor" or (
+            "mamba" in self.pattern and self.attention == "taylor"
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via shape-only tracing (no allocation) — used
+    for the 6·N·D roofline bookkeeping.  Works for 1T-param configs."""
+    import jax  # local import to keep config importable without jax init
+
+    from repro.models import lm  # noqa: PLC0415 (cycle-free: lm imports config only)
+
+    shapes = jax.eval_shape(lambda k: lm.lm_init(k, cfg), jax.ShapeDtypeStruct((2,), "uint32"))
+    return sum(x.size for x in jax.tree_util.tree_leaves(shapes))
+
+
+def _count_params_analytic(cfg: ModelConfig) -> int:
+    """Analytic estimate (cross-check only; small norm/bias drift tolerated)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+
+    def attn_params() -> int:
+        n = d * (h * hd) + 2 * d * (hk * hd) + (h * hd) * d
+        if cfg.qkv_bias:
+            n += h * hd + 2 * hk * hd
+        return n + 2 * d  # norms
+
+    def mlp_params(ff: int) -> int:
+        mult = 3 if cfg.act in ("silu", "geglu") else 2
+        return mult * d * ff
+
+    def moe_params() -> int:
+        m = cfg.moe
+        n = d * m.n_experts  # router
+        n += m.n_experts * mlp_params(m.d_ff_expert) // 1
+        if m.n_shared_experts:
+            n += mlp_params(m.d_ff_shared)
+        return n
+
+    def mamba_params() -> int:
+        s = cfg.ssm
+        di = s.d_inner(d)
+        nh = s.n_ssm_heads(d)
+        # in_proj: z, x, B, C, dt
+        n = d * (2 * di + 2 * s.n_groups * s.d_state + nh)
+        n += s.conv_width * (di + 2 * s.n_groups * s.d_state)  # conv
+        n += 2 * nh + nh  # A_log, D, dt_bias
+        n += di * d + di  # out_proj + gated norm
+        return n + d  # pre-norm
+
+    per_kind = {
+        "attn": attn_params() + mlp_params(cfg.d_ff),
+        "moe": attn_params() + (moe_params() if cfg.moe else 0),
+        "mamba": mamba_params() if cfg.ssm else 0,
+        "shared_attn": 0,  # counted once below
+        "cross": 2 * attn_params() + mlp_params(cfg.d_ff),
+    }
+    total = 0
+    for kind in cfg.pattern:
+        total += per_kind[kind] * cfg.n_groups
+    for kind in cfg.tail:
+        total += per_kind[kind]
+    if "shared_attn" in cfg.pattern + cfg.tail:
+        total += attn_params() + mlp_params(cfg.d_ff)
+    for kind in cfg.encoder_pattern:
+        total += per_kind[kind] * cfg.n_encoder_groups
+    total += cfg.vocab * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab * d
+    if cfg.family == "vlm" and cfg.vision_dim:
+        total += cfg.vision_dim * d  # projector
+    if cfg.pos == "learned":
+        total += cfg.max_seq * d
+    total += d  # final norm
+    return total
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only).
+
+    Embedding/unembedding params are included (their matmuls are real
+    compute); inactive routed experts are excluded."""
+    if cfg.moe is None:
+        return count_params(cfg)
+    full = count_params(cfg)
+    m = cfg.moe
+    d = cfg.d_model
+    mult = 3 if cfg.act in ("silu", "geglu") else 2
+    per_expert = mult * d * m.d_ff_expert
+    n_moe_blocks = sum(k == "moe" for k in cfg.pattern) * cfg.n_groups + sum(
+        k == "moe" for k in cfg.tail
+    )
+    inactive = n_moe_blocks * (m.n_experts - m.top_k) * per_expert
+    return full - inactive

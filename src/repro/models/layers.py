@@ -1,0 +1,157 @@
+"""Primitive layers: norms, projections, embeddings, RoPE, MLPs.
+
+Everything is pure-functional: ``*_init(key, ...) -> params`` (a nested dict
+of arrays) and ``*_apply(params, x, ...) -> y``.  Layer stacks are created by
+vmapping the init over a key per layer and applied with ``lax.scan`` (see
+models/lm.py) so depth never blows up HLO size.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def trunc_normal(key, shape, std: float, dtype=jnp.float32) -> Array:
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(params, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, bias: bool = False, in_axes: int = 1, dtype=jnp.float32):
+    """General projection with fan-in init.  ``shape`` is the full weight
+    shape; the first ``in_axes`` axes are contracted (fan-in)."""
+    fan_in = math.prod(shape[:in_axes])
+    params = {"w": trunc_normal(key, shape, 1.0 / math.sqrt(fan_in), dtype)}
+    if bias:
+        params["b"] = jnp.zeros(shape[in_axes:], dtype)
+    return params
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    # 1/sqrt(d): unit-variance logits under a unit-RMS final hidden state
+    # (gemma-style embed_scale restores O(1) input embeddings when tied).
+    return {"w": trunc_normal(key, (vocab, d), d**-0.5, dtype)}
+
+
+def embed_apply(params, ids: Array, dtype=jnp.bfloat16) -> Array:
+    return params["w"].astype(dtype)[ids]
+
+
+def unembed_apply(params, x: Array) -> Array:
+    """Logits (always fp32 for a stable softmax-xent)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, params["w"], preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_pos(positions: Array, d: int) -> Array:
+    """Transformer sinusoidal position encoding: [n] -> [n, d] (fp32).
+
+    Used for whisper at arbitrary lengths (the HF checkpoint's learned table
+    caps at 448; sinusoids keep the assigned 32k/500k shapes well-defined —
+    see DESIGN.md hardware-adaptation notes)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., n, hd] (positions [n] or broadcastable), rotate-half convention."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., n, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act in ("silu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d, d_ff), dtype=dtype)["w"],
+            "w_up": dense_init(ks[1], (d, d_ff), dtype=dtype)["w"],
+            "w_down": dense_init(ks[2], (d_ff, d), dtype=dtype)["w"],
+        }
+    if act == "gelu":  # plain 2-matrix MLP (whisper)
+        return {
+            "w_up": dense_init(ks[0], (d, d_ff), dtype=dtype)["w"],
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d), dtype=dtype)["w"],
+            "b_down": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(act)
+
+
+def mlp_apply(params, x: Array, act: str) -> Array:
+    dtype = x.dtype
+    if act in ("silu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+        up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+        g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+        return jnp.einsum("...f,fd->...d", g * up, params["w_down"].astype(dtype))
+    if act == "gelu":
+        h = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+        h = jax.nn.gelu(h + params["b_up"].astype(dtype), approximate=True)
+        return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dtype)) + params[
+            "b_down"
+        ].astype(dtype)
+    raise ValueError(act)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,393 @@
+"""Model assembly: decoder-only LM, encoder-decoder (whisper-style), and VLM
+(cross-attention) variants — all expressed as a repeating block ``pattern``
+scanned over ``n_groups`` (+ optional ``tail``), so HLO size is O(1) in depth.
+
+Inputs are a dict:
+  tokens        [b, n]  int32          (always)
+  labels        [b, n]  int32          (training)
+  image_embeds  [b, n_img, vision_dim] (vlm; stub vision tower output)
+  audio_frames  [b, n_audio, d_model]  (encdec; stub conv-frontend output)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models.blocks import block_apply, block_decode, block_init, block_prefill
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    sinusoidal_pos,
+    embed_apply,
+    embed_init,
+    norm_apply,
+    norm_init,
+    softcap,
+    trunc_normal,
+    unembed_apply,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _runs(kinds):
+    """Collapse a pattern into runs of equal kinds: [('mamba', 6), ('shared_attn', 1)].
+
+    Each non-shared run is applied with an inner lax.scan so XLA cannot hoist
+    several blocks' remat recomputations into one live window (that
+    scheduler freedom is what blew zamba2's backward to 7× one block's
+    working set; see EXPERIMENTS.md §Perf)."""
+    out = []
+    for kind in kinds:
+        if out and out[-1][0] == kind:
+            out[-1] = (kind, out[-1][1] + 1)
+        else:
+            out.append((kind, 1))
+    return tuple(out)
+
+
+def _stack_init(key, kinds, n_groups: int, cfg: ModelConfig, dtype):
+    """Init one stacked param set per pattern RUN: leaves [n_groups, run_len, ...]."""
+    out = {}
+    for j, (kind, rl) in enumerate(_runs(kinds)):
+        if kind == "shared_attn":
+            continue  # shared weights live outside the stack
+        keys = jax.random.split(jax.random.fold_in(key, j), n_groups * rl).reshape(
+            n_groups, rl, 2
+        )
+        out[f"r{j}"] = jax.vmap(
+            jax.vmap(lambda k: block_init(k, kind, cfg, dtype))
+        )(keys)
+    return out
+
+
+def lm_init(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "blocks": {"group": _stack_init(ks[1], cfg.pattern, cfg.n_groups, cfg, dtype)},
+    }
+    if cfg.tail:
+        params["blocks"]["tail"] = {
+            f"t{i}": block_init(jax.random.fold_in(ks[2], i), kind, cfg, dtype)
+            for i, kind in enumerate(cfg.tail)
+            if kind != "shared_attn"
+        }
+    if "shared_attn" in cfg.pattern + cfg.tail:
+        params["blocks"]["shared"] = block_init(ks[3], "shared_attn", cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[4], cfg.vocab, cfg.d_model, dtype)
+    if cfg.pos == "learned":
+        params["pos_embed"] = trunc_normal(ks[5], (cfg.max_seq, cfg.d_model), 0.01, dtype)
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(ks[6], (cfg.vision_dim, cfg.d_model), dtype=dtype)
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "group": _stack_init(ks[7], cfg.encoder_pattern, cfg.n_encoder_groups, cfg, dtype),
+            "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        }
+        if cfg.pos == "learned":
+            params["encoder"]["pos_embed"] = trunc_normal(
+                ks[8], (cfg.n_audio_ctx, cfg.d_model), 0.01, dtype
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Stack application (scan over groups)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    raise ValueError(cfg.remat)
+
+
+def _stack_apply(
+    blocks,
+    kinds,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Optional[Array],
+    kv_src: Optional[Array],
+    causal: bool,
+) -> Tuple[Array, Array]:
+    shared = blocks.get("shared")
+    group = blocks["group"]
+    runs = _runs(kinds)
+
+    # Remat at BLOCK granularity; blocks of one run execute under an inner
+    # lax.scan, so backward recomputation is strictly one block at a time.
+    def one_block(p, x, kind):
+        x, a = block_apply(p, kind, x, cfg, positions, kv_src, causal)
+        return constrain(x, "dp", "sp", None), a
+
+    block_fns = {
+        kind: _remat(functools.partial(one_block, kind=kind), cfg)
+        for kind in set(kinds) | set(cfg.tail)
+    }
+
+    def run_scan(kind, rl, x, aux, run_params):
+        def body(carry, p):
+            x, aux = carry
+            x, a = block_fns[kind](shared if kind == "shared_attn" else p, x)
+            return (x, aux + a), None
+
+        xs = None if kind == "shared_attn" else run_params
+        (x, aux), _ = jax.lax.scan(body, (x, aux), xs, length=rl)
+        return x, aux
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for j, (kind, rl) in enumerate(runs):
+            rp = None if kind == "shared_attn" else group_params[f"r{j}"]
+            x, aux = run_scan(kind, rl, x, aux, rp)
+        return (x, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if group:
+        (x, aux), _ = jax.lax.scan(group_body, (x, aux0), group)
+    else:
+        aux = aux0
+    for i, kind in enumerate(cfg.tail):
+        p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
+        x, a = block_fns[kind](p, x)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens: Array, cfg: ModelConfig) -> Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][: tokens.shape[1]].astype(dtype)[None]
+    elif cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(jnp.arange(tokens.shape[1]), cfg.d_model).astype(dtype)[None]
+    return constrain(x, "dp", "sp", None)
+
+
+def _encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """Whisper-style encoder over (stubbed) conv-frontend frames."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = params["encoder"]
+    if cfg.pos == "learned":
+        pe = enc["pos_embed"][: frames.shape[1]].astype(dtype)
+    else:
+        pe = sinusoidal_pos(jnp.arange(frames.shape[1]), cfg.d_model).astype(dtype)
+    x = frames.astype(dtype) + pe[None]
+    x, _ = _stack_apply(enc, cfg.encoder_pattern, x, cfg, None, None, causal=False)
+    return norm_apply(enc["final_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def _kv_source(params, batch: Dict[str, Array], cfg: ModelConfig) -> Optional[Array]:
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(jnp.dtype(cfg.dtype))
+        return jnp.einsum("bnv,vd->bnd", img, params["vision_proj"]["w"].astype(img.dtype))
+    if cfg.family == "encdec":
+        return _encode(params, batch["audio_frames"], cfg)
+    return None
+
+
+def _logits(params, x: Array, cfg: ModelConfig) -> Array:
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_apply(table, x)
+    logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "dp", "sp", "tp")
+
+
+def lm_apply(
+    params, batch: Dict[str, Array], cfg: ModelConfig
+) -> Tuple[Array, Array]:
+    """Full training/eval forward.  Returns (logits [b, n, vocab] fp32, aux)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    kv_src = _kv_source(params, batch, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    x, aux = _stack_apply(
+        params["blocks"], cfg.pattern, x, cfg, positions, kv_src, causal=True
+    )
+    return _logits(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(
+    params, batch: Dict[str, Array], cfg: ModelConfig, n_max: int
+) -> Tuple[Array, Any]:
+    """Prompt pass.  Returns (logits of last position [b, vocab], caches).
+
+    caches = {"group": stacked-per-group cache pytree, "tail": tuple,
+              "kv_src": encoder/vision output or None}
+    """
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    kv_src = _kv_source(params, batch, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    blocks = params["blocks"]
+    shared = blocks.get("shared")
+
+    runs = _runs(cfg.pattern)
+
+    def group_body(x, group_params):
+        caches = []
+        for j, (kind, rl) in enumerate(runs):
+            def run_body(x, p):
+                x, c = block_prefill(
+                    shared if kind == "shared_attn" else p,
+                    kind, x, cfg, n_max, positions, kv_src,
+                )
+                return x, c
+
+            xs = None if kind == "shared_attn" else group_params[f"r{j}"]
+            x, run_caches = jax.lax.scan(run_body, x, xs, length=rl)
+            caches.append(run_caches)  # leaves [rl, ...]
+        return x, tuple(caches)
+
+    if blocks["group"]:
+        x, group_caches = jax.lax.scan(group_body, x, blocks["group"])
+    else:
+        group_caches = ()
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail):
+        p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
+        x, c = block_prefill(p, kind, x, cfg, n_max, positions, kv_src)
+        tail_caches.append(c)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
+    caches = {"group": group_caches, "tail": tuple(tail_caches), "kv_src": kv_src}
+    return logits, caches
+
+
+def lm_decode_step(
+    params, token_t: Array, caches, pos, cfg: ModelConfig
+) -> Tuple[Array, Any]:
+    """One decode step.  token_t: [b] int32; pos: scalar int32 (0-based
+    position of this token).  Returns (logits [b, vocab], new caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x_t = embed_apply(params["embed"], token_t, dtype)
+    if cfg.embed_scale:
+        x_t = x_t * jnp.asarray(cfg.d_model**0.5, dtype)
+    if cfg.pos == "learned":
+        x_t = x_t + jax.lax.dynamic_index_in_dim(
+            params["pos_embed"], pos, 0, keepdims=False
+        ).astype(dtype)[None]
+    elif cfg.pos == "sinusoidal":
+        x_t = x_t + sinusoidal_pos(pos[None], cfg.d_model).astype(dtype)
+    blocks = params["blocks"]
+    shared = blocks.get("shared")
+    kv_src = caches.get("kv_src")
+
+    runs = _runs(cfg.pattern)
+
+    def group_body(x_t, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for j, (kind, rl) in enumerate(runs):
+            def run_body(x_t, step_xs):
+                p, c = step_xs
+                x_t, c = block_decode(
+                    shared if kind == "shared_attn" else p, kind, x_t, c, cfg, pos
+                )
+                return x_t, c
+
+            rp = None if kind == "shared_attn" else group_params[f"r{j}"]
+            x_t, run_caches = jax.lax.scan(
+                run_body, x_t, (rp, group_caches[j]), length=rl
+            )
+            new_caches.append(run_caches)
+        return x_t, tuple(new_caches)
+
+    if blocks["group"]:
+        x_t, group_caches = jax.lax.scan(
+            group_body, x_t, (blocks["group"], caches["group"])
+        )
+    else:
+        group_caches = ()
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail):
+        p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
+        x_t, c = block_decode(p, kind, x_t, caches["tail"][i], cfg, pos)
+        tail_caches.append(c)
+    logits = _logits(params, x_t[:, None, :], cfg)[:, 0, :]
+    new = {"group": group_caches, "tail": tuple(tail_caches), "kv_src": kv_src}
+    return logits, new
+
+
+# ---------------------------------------------------------------------------
+# Cache construction without a prefill pass (dry-run / serving allocation)
+# ---------------------------------------------------------------------------
+
+
+def lm_init_caches(
+    cfg: ModelConfig, batch: int, n_max: int, dtype=jnp.bfloat16
+):
+    """Zero-initialised decode caches with the exact pytree structure that
+    lm_prefill produces (group caches stacked over n_groups)."""
+    from repro.models.attention import CrossCache, init_cache  # noqa: PLC0415
+    from repro.models.ssm import mamba_init_cache  # noqa: PLC0415
+    from repro.core import init_taylor_state  # noqa: PLC0415
+    from repro.models.attention import KVCache  # noqa: PLC0415
+
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def one(kind):
+        if kind == "mamba":
+            return mamba_init_cache(cfg, batch, dtype)
+        self_cache = init_cache(cfg, batch, n_max, dtype)
+        if kind != "cross":
+            return self_cache
+        n_src = cfg.n_image_tokens if cfg.family == "vlm" else cfg.n_audio_ctx
+        if cfg.attention == "taylor":
+            cc = CrossCache(kv=init_taylor_state(batch, hk, hd, hd, cfg.taylor))
+        else:
+            z = jnp.zeros((batch, hk, n_src, hd), dtype)
+            cc = CrossCache(kv=KVCache(k=z, v=z, length=jnp.asarray(n_src, jnp.int32)))
+        return (self_cache, cc)
+
+    def stack(tree, rl):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x[None, None], (cfg.n_groups, rl) + x.shape
+            ),
+            tree,
+        )
+
+    group = (
+        tuple(stack(one(kind), rl) for kind, rl in _runs(cfg.pattern))
+        if cfg.n_groups
+        else ()
+    )
+    tail = tuple(one(k) for k in cfg.tail)
+    kv_src = None
+    if cfg.family == "vlm":
+        kv_src = jnp.zeros((batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    elif cfg.family == "encdec":
+        kv_src = jnp.zeros((batch, cfg.n_audio_ctx, cfg.d_model), dtype)
+    return {"group": group, "tail": tail, "kv_src": kv_src}

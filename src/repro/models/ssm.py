@@ -1,0 +1,264 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+SSD is *linear attention with per-step decay*: the recurrence
+
+    h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t        (h: [P, N] per head)
+    y_t = C_t · h_t + D · x_t
+
+is computed chunk-wise exactly like core/taylor.py's chunked scan — intra-
+chunk quadratic with decay-weighted scores, inter-chunk through the carried
+state.  (The structural identity with the paper's technique is why this
+lives naturally in the same framework; see DESIGN.md §4.)
+
+Block layout (Mamba2 paper): in_proj → [z | x | B | C | dt]; short causal
+depthwise conv on (x, B, C); SSD; gated RMSNorm(y ⊙ silu(z)); out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import dense_init, norm_apply, norm_init, trunc_normal
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    conv: Array  # [b, W-1, conv_channels] — last W-1 pre-conv activations
+    ssd: Array  # [b, H, P, N] — SSD recurrent state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    dbc = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    params = {
+        "in_proj": dense_init(ks[0], (d, 2 * di + dbc + nh), dtype=dtype),
+        "conv_w": trunc_normal(ks[1], (s.conv_width, di + dbc), 0.1, dtype),
+        "conv_b": jnp.zeros((di + dbc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dtype),
+        "gate_norm": norm_init(di, "rmsnorm", dtype),
+    }
+    return params
+
+
+def _split_proj(s: SSMConfig, d_model: int, zxbcdt: Array):
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    gN = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * gN]
+    dt = zxbcdt[..., 2 * di + 2 * gN :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, state: Optional[Array] = None):
+    """Depthwise causal conv, width W.  xbc: [b, n, c].  Returns (y, new_state)
+    where state holds the last W-1 inputs for streaming decode."""
+    W = w.shape[0]
+    bsz, n, c = xbc.shape
+    if state is None:
+        pad = jnp.zeros((bsz, W - 1, c), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [b, n+W-1, c]
+    # accumulate in the activation dtype: W≤4 taps lose nothing at bf16 and
+    # an f32 buffer here doubles the largest transient in mamba blocks
+    y = xp[:, 0:n, :] * w[0].astype(xbc.dtype)
+    for i in range(1, W):
+        y = y + xp[:, i : i + n, :] * w[i].astype(xbc.dtype)
+    y = jax.nn.silu(y.astype(jnp.float32) + b.astype(jnp.float32))
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else jnp.zeros((bsz, 0, c), xbc.dtype)
+    return y.astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(
+    x: Array,  # [b, n, H, P]
+    dt: Array,  # [b, n, H]      (after softplus)
+    A: Array,  # [H]             (negative)
+    B: Array,  # [b, n, G, N]
+    C: Array,  # [b, n, G, N]
+    chunk: int,
+    initial_state: Optional[Array] = None,
+    return_state: bool = False,
+):
+    """Exact chunked SSD scan.  G divides H (B/C shared per group)."""
+    b, n, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    nc = n // chunk
+    f32 = jnp.float32
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(B, rep, axis=2)  # [b, n, H, N]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    la = dt.astype(f32) * A.astype(f32)[None, None, :]  # log decay [b, n, H]
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]  # dt-scaled input
+
+    # chunk-major
+    shp = (b, nc, chunk)
+    lac = jnp.moveaxis(la.reshape(*shp, H), 1, 0)  # [nc, b, c, H]
+    xc = jnp.moveaxis(xdt.reshape(*shp, H, Pd), 1, 0)
+    Bc = jnp.moveaxis(Bh.astype(f32).reshape(*shp, H, N), 1, 0)
+    Cc = jnp.moveaxis(Ch.astype(f32).reshape(*shp, H, N), 1, 0)
+    # pin: scan axis replicated, batch over dp, heads over tp when divisible
+    lac = constrain(lac, None, "dp", "*", "tp")
+    xc = constrain(xc, None, "dp", "*", "tp", None)
+    Bc = constrain(Bc, None, "dp", "*", "tp", None)
+    Cc = constrain(Cc, None, "dp", "*", "tp", None)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    h0 = initial_state
+    if h0 is None:
+        h0 = jnp.zeros((b, H, Pd, N), f32)
+
+    def step(h, xs):
+        la_c, x_c, B_c, C_c = xs  # [b, c, H(, ...)]
+        cum = jnp.cumsum(la_c, axis=1)  # [b, c, H] inclusive
+        total = cum[:, -1, :]  # [b, H]
+        # intra-chunk: S_ij = (C_i·B_j) exp(cum_i - cum_j) for j <= i
+        scores = jnp.einsum("bihn,bjhn->bhij", C_c, B_c)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # [b, i, j, H]
+        decay = jnp.moveaxis(decay, 3, 1)  # [b, H, i, j]
+        w = jnp.where(mask, jnp.exp(decay) * scores, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w, x_c)
+        # inter-chunk: y_i += C_i · (exp(cum_i) h_prev)
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", C_c, h, jnp.exp(cum))
+        # state update: h_new = exp(total) h + Σ_j exp(total - cum_j) B_j x_j
+        wj = jnp.exp(total[:, None, :] - cum)  # [b, c, H]
+        h_new = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjhn,bjhp,bjh->bhpn", B_c, x_c, wj
+        )
+        return h_new, y_intra + y_inter
+
+    # remat the chunk step: scan autodiff otherwise saves the decay/score
+    # tensors ([b,H,c,c] ×4) for every chunk — recompute them instead and
+    # keep only the [b,H,P,N] carry per chunk.
+    h_final, ys = jax.lax.scan(jax.checkpoint(step), h0, (lac, xc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n, H, Pd)
+    if return_state:
+        return y, h_final
+    return y
+
+
+def mamba_apply(
+    params,
+    x: Array,  # [b, n, d]
+    cfg: ModelConfig,
+    chunk: int = 128,
+) -> Array:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    gN = s.n_groups * s.d_state
+    b, n, _ = x.shape
+    dtype = x.dtype
+
+    zxbcdt = jnp.einsum("bnd,dk->bnk", x, params["in_proj"]["w"].astype(dtype))
+    zxbcdt = constrain(zxbcdt, "dp", None, "tp")
+    z, xbc, dt = _split_proj(s, d, zxbcdt)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, n, nh, s.head_dim)
+    xs = constrain(xs, "dp", None, "tp", None)
+    B = xbc[..., di : di + gN].reshape(b, n, s.n_groups, s.d_state)
+    C = xbc[..., di + gN :].reshape(b, n, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if n % chunk != 0:
+        chunk = n  # single chunk fallback (tests / odd shapes)
+    y = None
+    if cfg.attn_sharding == "cp":
+        # decay-weighted context parallelism (core/ssd_context_parallel):
+        # shard the sequence, exchange one [b,H,P,N] state per layer
+        from repro.core.ssd_context_parallel import ssd_context_parallel  # noqa: PLC0415
+        from repro.distributed import api as dist_api  # noqa: PLC0415
+
+        ctx = dist_api.active()
+        if ctx is not None:
+            mesh, rules = ctx
+            seq_ax = rules.get("sp") or rules.get("tp")
+            if seq_ax is not None and n % (
+                dist_api.mesh_axis_size(mesh, seq_ax) * chunk
+            ) == 0:
+                y = ssd_context_parallel(
+                    xs, dt, A, B, C, mesh, seq_ax, chunk=chunk,
+                    dp_axis=rules.get("dp"),
+                )
+    if y is None:
+        y = _ssd_chunked(xs, dt, A, B, C, chunk)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, n, di).astype(dtype)
+    y = norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    y = jnp.einsum("bnk,kd->bnd", y, params["out_proj"]["w"].astype(dtype))
+    return constrain(y, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# Streaming decode
+# ---------------------------------------------------------------------------
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    gN = s.n_groups * s.d_state
+    return MambaCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, di + 2 * gN), dtype),
+        ssd=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def mamba_decode_step(
+    params, x_t: Array, cache: MambaCache, cfg: ModelConfig
+) -> Tuple[Array, MambaCache]:
+    """One token: x_t [b, d] → (y_t [b, d], cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    gN = s.n_groups * s.d_state
+    bsz = x_t.shape[0]
+    dtype = x_t.dtype
+
+    zxbcdt = jnp.einsum("bd,dk->bk", x_t, params["in_proj"]["w"].astype(dtype))
+    z, xbc, dt = _split_proj(s, d, zxbcdt)
+    y_c, conv_state = _causal_conv(
+        xbc[:, None, :], params["conv_w"], params["conv_b"], state=cache.conv
+    )
+    xbc = y_c[:, 0, :]
+    xs = xbc[..., :di].reshape(bsz, nh, s.head_dim).astype(jnp.float32)
+    B = xbc[..., di : di + gN].reshape(bsz, s.n_groups, s.d_state).astype(jnp.float32)
+    C = xbc[..., di + gN :].reshape(bsz, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)  # [b, H, N]
+    Ch = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b, H]
+    A = -jnp.exp(params["A_log"])
+
+    a_t = jnp.exp(dt * A[None, :])  # [b, H]
+    h = cache.ssd * a_t[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, xs, dt
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(bsz, di).astype(dtype)
+    y = norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    y = jnp.einsum("bk,kd->bd", y, params["out_proj"]["w"].astype(dtype))
+    return y, MambaCache(conv=conv_state, ssd=h)

@@ -1,0 +1,23 @@
+"""Optimizers (self-contained, optax-style pure pytree transforms)."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    apply_updates,
+    global_norm,
+    sgdm,
+)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "apply_updates",
+    "constant",
+    "cosine_warmup",
+    "global_norm",
+    "linear_warmup",
+    "sgdm",
+]

@@ -1,0 +1,259 @@
+"""Minimal production optimizer suite (pure pytree transforms).
+
+``Optimizer`` mirrors the optax contract: ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)``; ``apply_updates`` adds
+them.  Memory options matter at 1T-param scale (see kimi-k2 preset):
+
+  * adamw      — fp32 m/v (default) or bf16 m/v (``state_dtype``).
+  * adafactor  — factored second moment for ≥2D params (rank-1 row/col
+    statistics, ~0 bytes/param) + optional bf16 momentum.  This is what
+    makes 1T params fit 16 GB/chip HBM on 512 chips (see DESIGN.md).
+  * sgdm       — momentum baseline.
+
+All optimizers fold in global-norm gradient clipping (``clip_norm``) and a
+learning-rate schedule (callable step -> lr).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, clip_norm: Optional[float]):
+    if clip_norm is None:
+        return grads, jnp.asarray(0.0, jnp.float32)
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def adamw(
+    schedule: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(z, params),
+            v=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = schedule(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(state_dtype), v32.astype(state_dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], jax.Array))
+        m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], jax.Array))
+        v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], jax.Array))
+        return updates, AdamState(step=step, m=m, v=v)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# ---------------------------------------------------------------------------
+
+
+class FactoredV(NamedTuple):
+    """Second-moment statistics for one param: either factored row/col (2D+)
+    or full (1D/scalars)."""
+
+    row: Array  # shape[:-1]            (zeros((1,)) when unused)
+    col: Array  # shape[:-2] + [-1]     (zeros((1,)) when unused)
+    full: Array  # same as param         (zeros((1,)) when factored)
+
+
+class AdafactorState(NamedTuple):
+    step: Array
+    m: Any  # momentum (optional: zeros((1,)) leaves when disabled)
+    v: Any  # tree of FactoredV
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(
+    schedule: Schedule,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    momentum: Optional[float] = 0.9,
+    momentum_dtype=jnp.bfloat16,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    def init(params):
+        def fv(p):
+            if _factorable(p.shape):
+                return FactoredV(
+                    row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    full=jnp.zeros((1,), jnp.float32),
+                )
+            return FactoredV(
+                row=jnp.zeros((1,), jnp.float32),
+                col=jnp.zeros((1,), jnp.float32),
+                full=jnp.zeros(p.shape, jnp.float32),
+            )
+
+        def mom(p):
+            if momentum is None:
+                return jnp.zeros((1,), momentum_dtype)
+            return jnp.zeros(p.shape, momentum_dtype)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(mom, params),
+            v=jax.tree_util.tree_map(fv, params, is_leaf=None),
+        )
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = schedule(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factorable(g.shape):
+                row = decay * v.row + (1 - decay) * jnp.mean(g2, axis=-1)
+                col = decay * v.col + (1 - decay) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction: v̂ = row ⊗ col / mean(row)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = row[..., :, None] * col[..., None, :] / jnp.maximum(rmean[..., None], eps)
+                newv = FactoredV(row=row, col=col, full=v.full)
+            else:
+                full = decay * v.full + (1 - decay) * g2
+                vhat = full
+                newv = FactoredV(row=v.row, col=v.col, full=full)
+            u = g32 * jax.lax.rsqrt(vhat + eps)
+            # update clipping (adafactor RMS trick)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            if momentum is not None:
+                m32 = momentum * m.astype(jnp.float32) + (1 - momentum) * u
+                u = m32
+                newm = m32.astype(momentum_dtype)
+            else:
+                newm = m
+            u = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return u, newm, newv
+
+        is3 = lambda t: isinstance(t, tuple) and len(t) == 3 and not isinstance(t, FactoredV)
+        out = jax.tree_util.tree_map(
+            upd, grads, state.m, state.v, params,
+            is_leaf=lambda x: isinstance(x, FactoredV),
+        )
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is3)
+        m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is3)
+        v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is3)
+        return updates, AdafactorState(step=step, m=m, v=v)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+class SgdState(NamedTuple):
+    step: Array
+    m: Any
+
+
+def sgdm(
+    schedule: Schedule,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = 1.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        return SgdState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+        )
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = schedule(step)
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m32 = momentum * m.astype(jnp.float32) + g32
+            return -lr * m32, m32.astype(state_dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state.m, params)
+        is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is2)
+        m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is2)
+        return updates, SgdState(step=step, m=m)
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    if name == "sgdm":
+        return sgdm(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

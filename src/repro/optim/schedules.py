@@ -1,0 +1,31 @@
+"""Learning-rate schedules: step (int32 array) -> lr (fp32)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return fn

@@ -1,0 +1,5 @@
+"""Serving: prefill/decode engine with batched generation."""
+
+from repro.serve.engine import decode_step, generate, prefill
+
+__all__ = ["decode_step", "generate", "prefill"]

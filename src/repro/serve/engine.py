@@ -1,0 +1,64 @@
+"""Inference engine.
+
+``prefill`` runs the prompt and materialises per-layer decode caches
+(KV caches for softmax; O(1) Taylor moment states for the paper's backend —
+the state size is independent of context length, which is the whole point
+at 500k context).  ``decode_step`` advances one token for the whole batch.
+``generate`` is the convenience greedy loop used by examples/tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_decode_step, lm_prefill
+
+Array = jax.Array
+
+
+def prefill(params, batch: Dict[str, Array], cfg: ModelConfig, n_max: int):
+    """Returns (last-position logits [b, vocab], caches)."""
+    return lm_prefill(params, batch, cfg, n_max)
+
+
+def decode_step(params, token_t: Array, caches, pos, cfg: ModelConfig):
+    """One greedy step: returns (logits [b, vocab], new caches)."""
+    return lm_decode_step(params, token_t, caches, pos, cfg)
+
+
+def generate(
+    params,
+    batch: Dict[str, Array],
+    cfg: ModelConfig,
+    steps: int,
+    n_max: Optional[int] = None,
+    greedy: bool = True,
+    rng: Optional[Array] = None,
+) -> Array:
+    """Greedy/sampled generation.  Returns [b, steps] new tokens."""
+    prompt_len = batch["tokens"].shape[1]
+    n_max = n_max or (prompt_len + steps)
+    prefill_fn = jax.jit(functools.partial(lm_prefill, cfg=cfg, n_max=n_max))
+    step_fn = jax.jit(
+        functools.partial(lm_decode_step, cfg=cfg), donate_argnums=(2,)
+    )
+    logits, caches = prefill_fn(params, batch)
+    outs = []
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(steps):
+        outs.append(token)
+        if i == steps - 1:
+            break
+        pos = jnp.asarray(prompt_len + i, jnp.int32)
+        logits, caches = step_fn(params, token, caches, pos)
+        if greedy or rng is None:
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, sub = jax.random.split(rng)
+            token = jax.random.categorical(sub, logits).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,13 @@
+"""Training: loss, step function, fault-tolerant loop."""
+
+from repro.train.step import TrainState, cross_entropy, make_train_step, train_state_init
+from repro.train.loop import TrainLoopConfig, run_training
+
+__all__ = [
+    "TrainLoopConfig",
+    "TrainState",
+    "cross_entropy",
+    "make_train_step",
+    "run_training",
+    "train_state_init",
+]

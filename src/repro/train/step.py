@@ -1,0 +1,66 @@
+"""Loss + train step (pure; pjit-wrapped by launch/train.py and dryrun)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_apply, lm_init
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, apply_updates
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    step: Array
+    params: Any
+    opt_state: Any
+
+
+def train_state_init(key, cfg: ModelConfig, optimizer: Optimizer) -> TrainState:
+    params = lm_init(key, cfg)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean token NLL.  logits fp32 [b, n, v]; labels int32 [b, n]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, aux_weight: float = 0.01):
+    def loss_fn(params, batch: Dict[str, Array]):
+        logits, aux = lm_apply(params, batch, cfg)
+        nll = cross_entropy(logits, batch["labels"])
+        loss = nll + aux_weight * aux
+        return loss, {"loss": nll, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, aux_weight: float = 0.01):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Collectives (gradient all-reduce over dp/fsdp, TP reductions, MoE
+    exchanges) are inserted by the SPMD partitioner from the in/out
+    shardings that launch/train.py and launch/dryrun.py attach."""
+    loss_fn = make_loss_fn(cfg, aux_weight)
+
+    def train_step(state: TrainState, batch: Dict[str, Array]):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, total_loss=loss)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step

@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS must NOT be set here — tests run on the
+single real CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_qkv(rng, b=2, h=4, hk=2, n=64, d=16, dv=16, dtype="float32"):
+    import jax.numpy as jnp
+
+    q = jnp.asarray(rng.normal(size=(b, h, n, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hk, n, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hk, n, dv)), dtype)
+    return q, k, v

@@ -1,0 +1,147 @@
+"""Core Taylor-attention semantics: mode equivalences, causality, numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TaylorConfig,
+    flash_softmax_attention,
+    linear_attention,
+    merge_states,
+    softmax_attention,
+    taylor_attention,
+    taylor_attention_chunked,
+    taylor_attention_noncausal,
+    taylor_attention_parallel,
+    taylor_attention_recurrent,
+    taylor_features,
+    layernorm_no_affine,
+)
+from conftest import make_qkv
+
+CFG = TaylorConfig(order=2, alpha=3.0)
+
+
+@pytest.mark.parametrize("order", [1, 2])
+@pytest.mark.parametrize("hk", [1, 2, 4])
+def test_parallel_chunked_recurrent_equivalence(rng, order, hk):
+    q, k, v = make_qkv(rng, h=4, hk=hk)
+    cfg = TaylorConfig(order=order)
+    o_par = taylor_attention_parallel(q, k, v, cfg)
+    o_chk = taylor_attention_chunked(q, k, v, cfg, chunk=16)
+    o_rec = taylor_attention_recurrent(q, k, v, cfg)
+    np.testing.assert_allclose(o_par, o_chk, atol=2e-5)
+    np.testing.assert_allclose(o_par, o_rec, atol=2e-5)
+
+
+def test_chunked_matches_explicit_features(rng):
+    """The chunked moments formulation == explicit feature-map linear attn."""
+    q, k, v = make_qkv(rng)
+    phi = lambda x: taylor_features(x, CFG)
+    o_feat = linear_attention(q, k, v, phi=phi, causal=True, normalize_qk=True)
+    o_chk = taylor_attention_chunked(q, k, v, CFG, chunk=16)
+    np.testing.assert_allclose(o_feat, o_chk, atol=5e-5)
+
+
+def test_noncausal_matches_features(rng):
+    q, k, v = make_qkv(rng)
+    phi = lambda x: taylor_features(x, CFG)
+    o_feat = linear_attention(q, k, v, phi=phi, causal=False, normalize_qk=True)
+    o_nc = taylor_attention_noncausal(q, k, v, CFG)
+    np.testing.assert_allclose(o_feat, o_nc, atol=5e-5)
+
+
+def test_causality(rng):
+    """Perturbing future tokens must not change past outputs."""
+    q, k, v = make_qkv(rng)
+    out1 = taylor_attention_chunked(q, k, v, CFG, chunk=16)
+    t = 40
+    k2 = k.at[:, :, t:, :].set(jnp.asarray(rng.normal(size=k[:, :, t:, :].shape), k.dtype))
+    v2 = v.at[:, :, t:, :].set(jnp.asarray(rng.normal(size=v[:, :, t:, :].shape), v.dtype))
+    q2 = q.at[:, :, t:, :].set(jnp.asarray(rng.normal(size=q[:, :, t:, :].shape), q.dtype))
+    out2 = taylor_attention_chunked(q2, k2, v2, CFG, chunk=16)
+    np.testing.assert_allclose(out1[:, :, :t], out2[:, :, :t], atol=1e-5)
+
+
+def test_taylor_approaches_softmax_as_alpha_grows(rng):
+    """The whole point of the paper: order-2 ≈ softmax for small logits."""
+    q, k, v = make_qkv(rng)
+    qn = layernorm_no_affine(q).astype(jnp.float32)
+    kn = layernorm_no_affine(k).astype(jnp.float32)
+    errs = []
+    for alpha in (1.0, 3.0, 8.0):
+        cfg = TaylorConfig(order=2, alpha=alpha)
+        o_t = taylor_attention_parallel(q, k, v, cfg)
+        o_s = softmax_attention(qn, kn, v, causal=True, scale=cfg.scale(q.shape[-1]))
+        errs.append(float(jnp.max(jnp.abs(o_t - o_s))))
+    assert errs[2] < errs[1] < errs[0], errs
+    assert errs[2] < 1e-2
+
+
+def test_order2_beats_order1(rng):
+    q, k, v = make_qkv(rng)
+    qn = layernorm_no_affine(q).astype(jnp.float32)
+    kn = layernorm_no_affine(k).astype(jnp.float32)
+    errs = {}
+    for order in (1, 2):
+        cfg = TaylorConfig(order=order, alpha=3.0)
+        o_t = taylor_attention_parallel(q, k, v, cfg)
+        o_s = softmax_attention(qn, kn, v, causal=True, scale=cfg.scale(q.shape[-1]))
+        errs[order] = float(jnp.mean(jnp.abs(o_t - o_s)))
+    assert errs[2] < errs[1], errs
+
+
+def test_flash_softmax_equivalence(rng):
+    q, k, v = make_qkv(rng, n=128)
+    o_ref = softmax_attention(q, k, v, causal=True)
+    o_flash = flash_softmax_attention(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(o_ref, o_flash, atol=1e-5)
+
+
+def test_custom_vjp_grads_match_parallel(rng):
+    q, k, v = make_qkv(rng, n=64)
+    t = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v, CFG) * t)
+
+    g_par = jax.grad(loss(lambda *a: taylor_attention_parallel(*a)), (0, 1, 2))(q, k, v)
+    g_chk = jax.grad(
+        loss(lambda q, k, v, c: taylor_attention_chunked(q, k, v, c, chunk=16)),
+        (0, 1, 2),
+    )(q, k, v)
+    for a, b in zip(g_par, g_chk):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_merge_states_is_shard_concat(rng):
+    """Context parallelism invariant: running two shards then merging states
+    equals running the full sequence."""
+    q, k, v = make_qkv(rng)
+    half = 32
+    _, st1 = taylor_attention_chunked(
+        q[:, :, :half], k[:, :, :half], v[:, :, :half], CFG, chunk=16, return_state=True
+    )
+    _, st_full = taylor_attention_chunked(q, k, v, CFG, chunk=16, return_state=True)
+    o2, st2 = taylor_attention_chunked(
+        q[:, :, half:], k[:, :, half:], v[:, :, half:], CFG, chunk=16,
+        initial_state=st1, return_state=True,
+    )
+    o_full = taylor_attention_chunked(q, k, v, CFG, chunk=16)
+    np.testing.assert_allclose(o2, o_full[:, :, half:], atol=2e-5)
+    for a, b in zip(st2, st_full):
+        if a is not None:
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-4)
+
+
+def test_decode_state_size_constant(rng):
+    """The paper's O(1)-decode claim: state size independent of context."""
+    from repro.core import init_taylor_state
+
+    s1 = init_taylor_state(1, 2, 16, 16, CFG)
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(s1))
+    # 32k-token bf16 KV cache for the same head geometry:
+    kv_bytes = 2 * 32768 * 16 * 2 * 2
+    assert nbytes < kv_bytes  # smaller than the cache it replaces

@@ -1,0 +1,99 @@
+"""Pallas kernel vs pure-jnp oracle (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TaylorConfig, taylor_attention_chunked
+from repro.core.feature_map import layernorm_no_affine
+from repro.kernels.taylor_attention.ops import (
+    taylor_attention_kernel,
+    taylor_attention_kernel_trainable,
+)
+from repro.kernels.taylor_attention.ref import taylor_attention_ref
+
+
+def _ref(q, k, v, alpha=3.0, order=2):
+    b, h, n, d = q.shape
+    hk = k.shape[1]
+    qn = layernorm_no_affine(q).astype(jnp.float32)
+    kn = layernorm_no_affine(k).astype(jnp.float32)
+    qg = qn.reshape(b, hk, h // hk, n, d)
+    return taylor_attention_ref(qg, kn, v.astype(jnp.float32), alpha, order).reshape(
+        b, h, n, v.shape[-1]
+    )
+
+
+SWEEP = [
+    # b, h, hk, n, d, dv
+    (1, 2, 1, 256, 128, 128),
+    (2, 4, 2, 256, 64, 64),
+    (1, 3, 3, 384, 112, 112),   # zamba2 head dim, padded 112->128
+    (1, 2, 1, 300, 128, 128),   # sequence padding 300->384
+    (1, 8, 1, 128, 128, 128),   # MQA, one state for 8 q-heads
+    (1, 2, 2, 256, 64, 256),    # two d_v tiles
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(c) for c in SWEEP])
+def test_kernel_matches_ref(rng, case):
+    b, h, hk, n, d, dv = case
+    q = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hk, n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hk, n, dv)), jnp.float32)
+    out = taylor_attention_kernel(q, k, v, interpret=True)
+    ref = _ref(q, k, v)
+    rel = float(jnp.max(jnp.abs(out - ref))) / float(jnp.max(jnp.abs(ref)))
+    assert rel < 2e-5, rel
+
+
+@pytest.mark.parametrize("order", [1, 2])
+def test_kernel_orders(rng, order):
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    out = taylor_attention_kernel(q, k, v, order=order, interpret=True)
+    ref = _ref(q, k, v, order=order)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_kernel_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    out = taylor_attention_kernel(q, k, v, interpret=True)
+    ref = _ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    # bf16 inputs, f32 accumulation: tolerance at bf16 resolution
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref))) < 0.05
+
+
+def test_kernel_alpha_sweep(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    for alpha in (1.0, 3.0, 5.0):
+        out = taylor_attention_kernel(q, k, v, alpha=alpha, interpret=True)
+        ref = _ref(q, k, v, alpha=alpha)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-4, alpha
+
+
+def test_trainable_wrapper_grads(rng):
+    """Pallas forward + two-pass XLA backward == autodiff of chunked path."""
+    cfg = TaylorConfig(order=2, alpha=3.0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, 128, 64)), jnp.float32)
+    t = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        o = taylor_attention_kernel_trainable(q, k, v, cfg, chunk=64, interpret=True)
+        return jnp.sum(o * t)
+
+    def loss_xla(q, k, v):
+        return jnp.sum(taylor_attention_chunked(q, k, v, cfg, chunk=64) * t)
+
+    g1 = jax.grad(loss_kernel, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_xla, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-4, rtol=1e-3)

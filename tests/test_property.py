@@ -1,0 +1,98 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TaylorConfig, layernorm_no_affine, symvec, taylor_features
+from repro.core.feature_map import poly_scores
+from repro.data import make_task
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    d=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_symvec_identity(d, seed):
+    """psi(q)·psi(k) == (q·k)² — the multinomial-expansion compression."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    lhs = float(jnp.dot(symvec(q), symvec(k)))
+    rhs = float(jnp.dot(q, k)) ** 2
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=1e-4)
+
+
+@given(
+    d=st.sampled_from([4, 8, 16]),
+    order=st.sampled_from([1, 2]),
+    alpha=st.floats(1.0, 8.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_feature_map_dot_identity(d, order, alpha, seed):
+    """phi(q)·phi(k) == 1 + s + s²/2 with s = q·k/(alpha·sqrt(d)) (eq. 1)."""
+    rng = np.random.default_rng(seed)
+    cfg = TaylorConfig(order=order, alpha=alpha)
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    lhs = float(jnp.dot(taylor_features(q, cfg), taylor_features(k, cfg)))
+    s = float(jnp.dot(q, k)) * cfg.scale(d)
+    rhs = float(poly_scores(jnp.asarray(s), cfg))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=1e-4)
+    assert cfg.feature_dim(d) == len(taylor_features(q, cfg))
+
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.1, 10.0))
+@settings(**SETTINGS)
+def test_order2_kernel_positivity(seed, scale):
+    """1 + x + x²/2 = ((x+1)² + 1)/2 ≥ 1/2 — attention weights can never be
+    negative or vanish, so the normaliser is ≥ n/2 (DESIGN.md §1)."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(size=(256,)) * scale, jnp.float32)
+    p = poly_scores(s, TaylorConfig(order=2))
+    assert float(jnp.min(p)) >= 0.5 - 1e-6
+
+
+@given(seed=st.integers(0, 2**16), d=st.sampled_from([3, 8, 17]))
+@settings(**SETTINGS)
+def test_layernorm_no_affine_moments(seed, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(5, d)) * 7 + 3, jnp.float32)
+    y = layernorm_no_affine(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.var(y, -1)), 1.0, atol=1e-4)
+
+
+@given(
+    step=st.integers(0, 1000),
+    n_hosts=st.sampled_from([1, 2, 4]),
+    kind=st.sampled_from(["bigram", "copy", "uniform"]),
+)
+@settings(**SETTINGS)
+def test_data_determinism_and_host_disjointness(step, n_hosts, kind):
+    """batch_at is pure in (seed, step, host); hosts produce the global batch
+    in disjoint slices; token values stay in range."""
+    batches = []
+    for host in range(n_hosts):
+        t = make_task(kind, vocab=97, seq=32, global_batch=8, seed=5,
+                      n_hosts=n_hosts, host_id=host)
+        b1 = t.batch_at(step)
+        b2 = t.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 97
+        assert b1["tokens"].shape == (8 // n_hosts, 32)
+        batches.append(b1["tokens"])
+    if n_hosts > 1:  # different hosts, different rows
+        assert not np.array_equal(batches[0], batches[1])
+
+
+@given(step=st.integers(0, 200))
+@settings(**SETTINGS)
+def test_labels_are_shifted_tokens(step):
+    t = make_task("bigram", vocab=31, seq=16, global_batch=4, seed=1)
+    b = t.batch_at(step)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

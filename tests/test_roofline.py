@@ -1,0 +1,102 @@
+"""Analysis layer: jaxpr FLOP walker and HLO collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.flops import count_fn
+from repro.analysis.roofline import collective_bytes, roofline_report
+
+
+def test_walker_matmul_exact():
+    w = jax.ShapeDtypeStruct((64, 32), "float32")
+    x = jax.ShapeDtypeStruct((16, 64), "float32")
+    c = count_fn(lambda w, x: x @ w, w, x)
+    assert c["matmul_flops"] == 2 * 16 * 64 * 32
+
+
+def test_walker_counts_scan_trips():
+    w = jax.ShapeDtypeStruct((32, 32), "float32")
+    x = jax.ShapeDtypeStruct((8, 32), "float32")
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=17)
+        return h
+
+    c = count_fn(f, w, x)
+    assert c["matmul_flops"] == 17 * 2 * 8 * 32 * 32
+
+
+def test_walker_counts_grad_and_remat():
+    w = jax.ShapeDtypeStruct((32, 32), "float32")
+    x = jax.ShapeDtypeStruct((8, 32), "float32")
+
+    def loss(w, x):
+        f = jax.checkpoint(lambda h: jnp.tanh(h @ w))
+        def body(h, _):
+            return f(h), None
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return jnp.sum(h)
+
+    c = count_fn(jax.grad(loss), w, x)
+    one = 2 * 8 * 32 * 32
+    # fwd (4) + remat recompute (4) + dh (4) + dw (4) matmuls
+    assert c["matmul_flops"] >= 12 * one
+
+
+def test_collective_parser_trip_aware():
+    hlo = """
+HloModule test, num_partitions=8
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte1 = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%gte1), replica_groups=[2,4]<=[8], to_apply=%cond
+  %gte0 = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%gte0, %ar)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %ag = f32[8,64]{1,0} all-gather(%a), replica_groups=[1,8]<=[8], dimensions={1}
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%c0, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    res = collective_bytes(hlo)
+    ar_one = 8 * 8 * 4
+    assert res["all-reduce"]["operand_bytes"] == 12 * ar_one
+    # ring all-reduce: 2·(g-1)/g with g=4
+    assert res["all-reduce"]["link_bytes"] == int(12 * 2 * ar_one * 3 / 4)
+    ag_full = 8 * 64 * 4
+    assert res["all-gather"]["operand_bytes"] == ag_full // 8
+    assert res["all-gather"]["link_bytes"] == int(ag_full * 7 / 8)
+
+
+def test_roofline_report_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    rep = roofline_report(cost, "HloModule x, num_partitions=4", n_chips=4)
+    assert abs(rep["compute_s"] - 1.0) < 1e-6
+    assert abs(rep["memory_s"] - 1.0) < 1e-6
+    assert rep["collective_s"] == 0.0
+    assert rep["dominant"] in ("compute_s", "memory_s")
+
+
+def test_roofline_with_walker_correction():
+    cost = {"flops": 1e12, "bytes accessed": 1e10}
+    walker = {"flops": 8e12 * 4, "bytes": 1e12 * 4, "matmul_flops": 0, "elementwise_flops": 0}
+    rep = roofline_report(cost, "HloModule x, num_partitions=4", n_chips=4,
+                          walker=walker, model_flops=6e12 * 4)
+    assert abs(rep["flops_per_chip"] - 8e12) < 1e6
+    assert rep["loop_correction"] == 8.0
+    assert 0 < rep["useful_flops_ratio"] <= 1.0

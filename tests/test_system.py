@@ -1,0 +1,73 @@
+"""End-to-end behaviour: the paper's model trains and beats baselines where
+it should (associative recall needs real attention; bigram does not)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import make_task
+from repro.optim import adamw, cosine_warmup
+from repro.train import TrainLoopConfig, make_train_step, run_training, train_state_init
+
+
+def _train(cfg, task, steps, lr=3e-3, seed=0):
+    opt = adamw(cosine_warmup(lr, steps // 10, steps), weight_decay=0.0)
+    state = train_state_init(jax.random.PRNGKey(seed), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch_at = lambda s: {k: jnp.asarray(v) for k, v in task.batch_at(s).items()}
+    losses = []
+
+    def log(msg):
+        pass
+
+    for s in range(steps):
+        state, m = step(state, batch_at(s))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_taylor_lm_learns_bigram_structure():
+    """Loss on the Markov corpus must drop below the uniform floor ln(V)
+    (only bigram structure can take it there; floor for k=8 branches is
+    ln 8 ≈ 2.08)."""
+    import numpy as np
+
+    cfg = get_reduced("smollm-135m")  # taylor backend
+    task = make_task("bigram", cfg.vocab, 64, 8, seed=0)
+    losses = _train(cfg, task, steps=120)
+    uniform = float(np.log(cfg.vocab))
+    assert losses[-1] < uniform - 0.2, (losses[0], losses[-1], uniform)
+    assert losses[-1] < losses[0] - 0.4
+
+
+def test_taylor_beats_order1_on_recall():
+    """Associative recall (copy task): the order-2 approximation should track
+    softmax-like selectivity better than the pure linear (order-1) map —
+    the paper's central motivation."""
+    from repro.core.feature_map import TaylorConfig
+
+    base = get_reduced("smollm-135m").replace(n_groups=2)
+    task = make_task("copy", base.vocab, 64, 8, seed=1)
+    steps = 80
+    loss2 = _train(base.replace(taylor=TaylorConfig(order=2)), task, steps)[-1]
+    loss1 = _train(base.replace(taylor=TaylorConfig(order=1)), task, steps)[-1]
+    # allow slack: both learn, order-2 at least as good
+    assert loss2 < loss1 * 1.1, (loss1, loss2)
+
+
+def test_full_loop_with_checkpointing(tmp_path):
+    cfg = get_reduced("qwen2-1.5b")
+    task = make_task("bigram", cfg.vocab, 32, 4, seed=2)
+    opt = adamw(cosine_warmup(1e-3, 2, 20))
+    state = train_state_init(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch_at = lambda s: {k: jnp.asarray(v) for k, v in task.batch_at(s).items()}
+    loop = TrainLoopConfig(total_steps=10, checkpoint_dir=str(tmp_path),
+                           checkpoint_every=5, log_every=0, async_save=False)
+    state = run_training(step, state, batch_at, loop, log=lambda *_: None)
+    assert int(state.step) == 10
+    from repro.checkpoint import latest_step
+
+    assert latest_step(str(tmp_path)) == 10
