@@ -1,14 +1,26 @@
-"""Pallas Taylor-attention kernel vs reference paths.
+"""Pallas Taylor-attention kernels vs reference paths.
 
-On CPU the kernel runs in interpret mode (functional check + flop
+On CPU the kernels run in interpret mode (functional check + flop
 accounting); the derived column carries the walker-FLOP comparison and the
 kernel's VMEM working-set estimate — the real device win is exercised on
-TPU with the identical call."""
+TPU with the identical call.
+
+Rows:
+  kernel_interpret        — forward kernel vs ref.py oracle
+  kernel_xla_chunked_path — XLA chunked forward (reference path)
+  kernel_fwd_bwd          — fwd+bwd through the PALLAS backward pair; the
+                            derived column reports bwd/fwd walker-FLOP
+                            ratio (the recompute trade: must stay ≤2.5×)
+  kernel_fwd_bwd_xla      — fwd+bwd through the XLA taylor_vjp backward
+                            (the fallback path the Pallas pair replaces)
+  kernel_flops_and_vmem   — kernel FLOPs + VMEM working set
+"""
 
 from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,7 +29,10 @@ from repro.analysis.flops import count_fn
 from repro.core import TaylorConfig, taylor_attention_chunked
 from repro.core.feature_map import layernorm_no_affine
 from repro.kernels.taylor_attention.kernel import D_TILE
-from repro.kernels.taylor_attention.ops import taylor_attention_kernel
+from repro.kernels.taylor_attention.ops import (
+    taylor_attention_kernel,
+    taylor_attention_kernel_trainable,
+)
 from repro.kernels.taylor_attention.ref import taylor_attention_ref
 
 
@@ -39,9 +54,44 @@ def run():
     us_k = time_fn(kfn, q, k, v, iters=3, warmup=1)
     rows.append(emit("kernel_interpret", us_k, f"max_err_vs_ref={err:.2e}"))
 
-    xla = functools.partial(taylor_attention_chunked, cfg=TaylorConfig(), chunk=128)
+    cfg = TaylorConfig()
+    xla = functools.partial(taylor_attention_chunked, cfg=cfg, chunk=128)
     us_x = time_fn(xla, q, k, v, iters=3, warmup=1)
     rows.append(emit("kernel_xla_chunked_path", us_x, "reference_path"))
+
+    # ---- fwd+bwd: Pallas backward pair vs the XLA taylor_vjp backward ----
+    def make_loss(backward):
+        def loss(q, k, v):
+            o = taylor_attention_kernel_trainable(
+                q, k, v, cfg, interpret=True, backward=backward
+            )
+            return jnp.sum(o)
+
+        return jax.grad(loss, (0, 1, 2))
+
+    grad_pallas = jax.jit(make_loss("pallas"))
+    grad_xla_bwd = jax.jit(make_loss("xla"))
+
+    fl_fwd = count_fn(kfn, q, k, v)
+    fl_fb = count_fn(make_loss("pallas"), q, k, v)
+    fl_fb_xla = count_fn(make_loss("xla"), q, k, v)
+    # the recompute trade: the BACKWARD alone must stay ≤2.5× the forward
+    # (total fwd+bwd is then ≤3.5× — one forward plus the backward)
+    bwd_ratio = (fl_fb["flops"] - fl_fwd["flops"]) / fl_fwd["flops"]
+    total_ratio = fl_fb["flops"] / fl_fwd["flops"]
+
+    us_fb = time_fn(grad_pallas, q, k, v, iters=3, warmup=1)
+    rows.append(emit(
+        "kernel_fwd_bwd", us_fb,
+        f"flops={fl_fb['flops']:.3e};fwd_flops={fl_fwd['flops']:.3e};"
+        f"bwd_over_fwd={bwd_ratio:.2f};fwdbwd_over_fwd={total_ratio:.2f}",
+    ))
+    us_fb_xla = time_fn(grad_xla_bwd, q, k, v, iters=3, warmup=1)
+    rows.append(emit(
+        "kernel_fwd_bwd_xla", us_fb_xla,
+        f"flops={fl_fb_xla['flops']:.3e};pallas_over_xla_flops="
+        f"{fl_fb['flops'] / fl_fb_xla['flops']:.2f}",
+    ))
 
     fl = count_fn(xla, q, k, v)
     # kernel VMEM working set (f32): S2 + S1 + z2 + transients

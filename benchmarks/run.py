@@ -3,15 +3,30 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   bench_approx       — paper Figure 1 (Taylor approximation quality)
   bench_complexity   — the linear-complexity claim (§4)
-  bench_kernel       — Pallas kernel vs reference (hardware adaptation)
+  bench_kernel       — Pallas kernels vs reference (hardware adaptation)
   bench_quality      — §5 "Application" (left empty in the paper)
   bench_longcontext  — O(1)-state decode economics (beyond-paper)
+
+Additionally writes ``BENCH_kernel.json`` (name -> {us_per_call, derived})
+next to this file so the kernel perf trajectory is machine-readable across
+PRs, not just printed.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
+
+
+def _parse_rows(rows):
+    """'name,us,derived' CSV rows -> {name: {us_per_call, derived}}."""
+    parsed = {}
+    for row in rows or []:
+        name, us, derived = row.split(",", 2)
+        parsed[name] = {"us_per_call": float(us), "derived": derived}
+    return parsed
 
 
 def main() -> None:
@@ -26,15 +41,22 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
+    kernel_rows = {}
     for mod in (bench_approx, bench_complexity, bench_kernel,
                 bench_longcontext, bench_quality):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
-            mod.run()
+            rows = mod.run()
+            if name == "bench_kernel":
+                kernel_rows = _parse_rows(rows)
         except Exception as e:  # pragma: no cover
             failures.append((name, e))
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
+    if kernel_rows:
+        out_path = pathlib.Path(__file__).parent / "BENCH_kernel.json"
+        out_path.write_text(json.dumps(kernel_rows, indent=2) + "\n")
+        print(f"# wrote {out_path}")
     print(f"# total wall: {time.time() - t0:.1f}s")
     if failures:
         sys.exit(1)

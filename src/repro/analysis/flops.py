@@ -109,6 +109,17 @@ def eqn_flops_bytes(eqn, rec) -> Dict[str, float]:
     if p == "custom_vjp_call_jaxpr":
         inner = eqn.params.get("fun_jaxpr")
         return count_jaxpr(getattr(inner, "jaxpr", inner), rec)
+    if p == "pallas_call":
+        # One grid program runs the kernel jaxpr once; total = body × trips.
+        # (Without this the kernel counts as 1 FLOP/output element, making
+        # Pallas paths look ~free next to their XLA equivalents.)
+        body = count_jaxpr(getattr(eqn.params["jaxpr"], "jaxpr", eqn.params["jaxpr"]), rec)
+        grid = getattr(eqn.params.get("grid_mapping"), "grid", ()) or ()
+        trips = 1
+        for gdim in grid:
+            if isinstance(gdim, (int, np.integer)):
+                trips *= int(gdim)
+        return {k: v * trips for k, v in body.items()}
     return _default_cost(eqn)
 
 

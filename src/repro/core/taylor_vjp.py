@@ -14,6 +14,12 @@ Residual memory: O(n·(d + d_v)) + two live states.  Compute: ≈2× forward
 (the standard recompute trade).  Gradients are exact (tested against
 autodiff of the parallel-mode reference).
 
+This module is also the REFERENCE ORACLE for the Pallas backward kernel
+pair (kernels/taylor_attention/kernel_bwd.py implements the same two-pass
+math on-chip) and the trainable kernel wrapper's fallback whenever the
+Pallas envelope doesn't fit: d > 128 or d_v > 128 after padding, or
+sym_state (see ops.py::_pallas_bwd_ok and DESIGN.md §Backward).
+
 All math below uses raw moments (scale factors applied at contraction time),
 matching core/taylor.py.  q, k must already be LayerNorm'd by the caller.
 """

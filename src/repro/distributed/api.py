@@ -104,8 +104,14 @@ def constrain(x: Array, *axes: Optional[str]) -> Array:
         am = get_abstract_mesh()
         if not am.empty and any(t == AxisType.Manual for t in am.axis_types):
             return x
-    except ImportError:  # pragma: no cover - older jax
-        pass
+    except ImportError:  # jax 0.4.x: shard_map binds mesh axes in the axis env
+        try:
+            from jax._src.core import get_axis_env
+
+            if get_axis_env().axis_sizes:
+                return x
+        except Exception:  # pragma: no cover - API drift
+            pass
     resolved = []
     for name, size in zip(axes, x.shape):
         if name == "*":  # dim left to the SPMD partitioner
@@ -140,3 +146,20 @@ def mesh_axis_size(mesh: Mesh, name: Union[str, Tuple[str, ...], None]) -> int:
             out *= mesh.shape[n]
         return out
     return mesh.shape[name]
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-tolerant shard_map: jax ≥0.5 exposes ``jax.shard_map`` with a
+    ``check_vma`` kwarg; jax 0.4.x has ``jax.experimental.shard_map`` with
+    the same semantics under ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map  # noqa: PLC0415
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -1,5 +1,8 @@
-"""Pallas TPU kernel for chunked causal Taylor (order-2) linear attention."""
+"""Pallas TPU kernels for chunked causal Taylor (order-2) linear attention."""
 
-from repro.kernels.taylor_attention.ops import taylor_attention_kernel
+from repro.kernels.taylor_attention.ops import (
+    taylor_attention_kernel,
+    taylor_attention_kernel_trainable,
+)
 
-__all__ = ["taylor_attention_kernel"]
+__all__ = ["taylor_attention_kernel", "taylor_attention_kernel_trainable"]

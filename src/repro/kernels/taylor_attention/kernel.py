@@ -36,6 +36,73 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_CHUNK = 128
 D_TILE = 32  # first-axis tile of the second moment (controls transient size)
 
+# jax 0.4.x exposes the Mosaic compiler params as ``TPUCompilerParams``;
+# newer releases renamed it to ``CompilerParams``.  Take whichever exists.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def scores(q, k, a, causal, order):
+    """(s, p): scaled logits and causally-masked truncated-exp scores.
+
+    Shared by the forward and backward kernels so the score function can
+    never silently diverge between them."""
+    f32 = jnp.float32
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    ) * a
+    p = 1.0 + s
+    if order >= 2:
+        p = p + 0.5 * jnp.square(s)
+    return s, jnp.where(causal, p, 0.0)
+
+
+def dscores(dp, s, causal, a, order):
+    """ds = causal(dp · d/ds[1 + s + s²/2]) · a — the VJP of ``scores``."""
+    deriv = dp if order < 2 else dp * (1.0 + s)
+    return jnp.where(causal, deriv, 0.0) * a
+
+
+def accumulate_state(
+    k,  # [C, D]  f32
+    v,  # [C, DVt] f32
+    s0_ref,
+    s1_ref,
+    z1_ref,
+    z2_ref,
+    s2_ref,
+    *,
+    order: int,
+    d: int,
+):
+    """Accumulate one chunk of keys/values into the VMEM moment state.
+
+    Shared by the forward kernel and the backward dq kernel (which re-runs
+    the same forward-direction chunk scan to rebuild S_{<c}).
+    """
+    f32 = jnp.float32
+    C = k.shape[0]
+    if s0_ref is not None:  # the bwd dq kernel has no numerator read: no S0
+        s0_ref[0] = s0_ref[0] + jnp.sum(v, axis=0)
+    z1_ref[0] = z1_ref[0] + jnp.sum(k, axis=0)
+    s1_ref[...] = s1_ref[...] + jax.lax.dot_general(
+        k, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    if order >= 2:
+        z2_ref[...] = z2_ref[...] + jax.lax.dot_general(
+            k, k, (((0,), (0,)), ((), ())), preferred_element_type=f32
+        )
+        for t0 in range(0, d, D_TILE):
+            kk = (
+                k[:, t0 : t0 + D_TILE, None] * k[:, None, :]
+            ).reshape(C, D_TILE * d)  # [C, Dt*D]
+            s2_ref[t0 * d : (t0 + D_TILE) * d, :] = s2_ref[
+                t0 * d : (t0 + D_TILE) * d, :
+            ] + jax.lax.dot_general(
+                kk, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
+            )
+
 
 def _taylor_fwd_kernel(
     q_ref,  # [1, G, C, D]
@@ -81,13 +148,7 @@ def _taylor_fwd_kernel(
 
     for g in range(G):
         q = q_ref[0, g].astype(f32)  # [C, D]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=f32
-        ) * a  # [C, C]
-        p = 1.0 + s
-        if order >= 2:
-            p = p + 0.5 * jnp.square(s)
-        p = jnp.where(causal, p, 0.0)
+        _, p = scores(q, k, a, causal, order)  # [C, C]
 
         num = jax.lax.dot(p, v, preferred_element_type=f32)  # [C, DVt]
         den = jnp.sum(p, axis=1) + count  # [C] (count is scalar-broadcast)
@@ -115,24 +176,9 @@ def _taylor_fwd_kernel(
         out_ref[0, g] = (num / den[:, None]).astype(out_ref.dtype)
 
     # ---- state update with this chunk's keys/values ----
-    s0_ref[0] = s0_ref[0] + jnp.sum(v, axis=0)
-    z1_ref[0] = z1_ref[0] + jnp.sum(k, axis=0)
-    s1_ref[...] = s1_ref[...] + jax.lax.dot_general(
-        k, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    accumulate_state(
+        k, v, s0_ref, s1_ref, z1_ref, z2_ref, s2_ref, order=order, d=D
     )
-    if order >= 2:
-        z2_ref[...] = z2_ref[...] + jax.lax.dot_general(
-            k, k, (((0,), (0,)), ((), ())), preferred_element_type=f32
-        )
-        for t0 in range(0, D, D_TILE):
-            kk = (
-                k[:, t0 : t0 + D_TILE, None] * k[:, None, :]
-            ).reshape(C, D_TILE * D)  # [C, Dt*D]
-            s2_ref[t0 * D : (t0 + D_TILE) * D, :] = s2_ref[
-                t0 * D : (t0 + D_TILE) * D, :
-            ] + jax.lax.dot_general(
-                kk, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
-            )
 
 
 def taylor_fwd_pallas(
@@ -176,7 +222,7 @@ def taylor_fwd_pallas(
             pltpu.VMEM((d, d), jnp.float32),
             pltpu.VMEM((d * d, dv_tile), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

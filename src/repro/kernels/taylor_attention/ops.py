@@ -1,31 +1,37 @@
-"""Jit'd wrapper around the Taylor-attention Pallas kernel.
+"""Jit'd wrapper around the Taylor-attention Pallas kernels.
 
-Handles everything the raw kernel does not:
+Handles everything the raw kernels do not:
   * LayerNorm (no affine) of q/k — the paper's prescription;
   * GQA reshaping ([b, h, n, d] + [b, hk, n, d] -> grouped kernel layout);
   * zero-padding of the head dim to the 128-lane requirement and of the
     sequence to the chunk size (zero features are exact no-ops: they add 0
-    to every dot product and moment — see kernel.py docstring);
-  * training gradients: a custom VJP whose backward is the exact
-    FlashLinearAttention-style two-pass recompute (core/taylor_vjp math);
-    the Pallas kernel accelerates the forward, the backward runs the XLA
-    chunked path (a Pallas backward kernel is a further §Perf iteration).
+    to every dot product and moment — see DESIGN.md §Zero-padding);
+  * training gradients: a custom VJP whose backward is the Pallas
+    two-pass kernel pair (kernel_bwd.py) whenever the config fits it
+    (d ≤ 128, d_v ≤ 128 after padding, full second moment), and the exact
+    XLA chunked recompute (core/taylor_vjp) — the reference oracle —
+    otherwise.
 
-On this CPU container the kernel runs under ``interpret=True`` (validated
-against ref.py in tests/test_kernels.py); on TPU the same code lowers to
-Mosaic.
+The forward and backward share ONE zero-padding contract via
+``_kernel_layout`` so the two paths can never disagree about where the
+real rows live.
+
+On this CPU container the kernels run under ``interpret=True`` (validated
+against ref.py / autodiff in tests/test_kernels.py); on TPU the same code
+lowers to Mosaic.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.feature_map import TaylorConfig, layernorm_no_affine
 from repro.kernels.taylor_attention.kernel import DEFAULT_CHUNK, taylor_fwd_pallas
+from repro.kernels.taylor_attention.kernel_bwd import taylor_bwd_pallas
 
 Array = jax.Array
 
@@ -38,6 +44,76 @@ def _pad_to(x: Array, axis: int, mult: int) -> Array:
     pad = [(0, 0)] * x.ndim
     pad[axis] = (0, target - size)
     return jnp.pad(x, pad)
+
+
+class KernelDims(NamedTuple):
+    """True and padded dimensions of one kernel launch (the shared
+    zero-padding contract between the forward and backward kernels)."""
+
+    b: int
+    h: int
+    hk: int
+    g: int
+    n: int
+    d: int
+    dv: int
+    n_pad: int
+    d_pad: int
+    dv_pad: int
+
+
+def _round_up(size: int, mult: int) -> int:
+    return ((size + mult - 1) // mult) * mult
+
+
+def _layout_dims(q: Array, k: Array, v: Array, chunk: int) -> KernelDims:
+    """KernelDims from shapes alone (no padding work — dispatch decisions
+    must not materialise padded copies they may throw away)."""
+    b, h, n, d = q.shape
+    hk = k.shape[1]
+    return KernelDims(
+        b=b, h=h, hk=hk, g=h // hk, n=n, d=d, dv=v.shape[-1],
+        n_pad=_round_up(n, chunk), d_pad=_round_up(d, 128),
+        dv_pad=_round_up(v.shape[-1], 128),
+    )
+
+
+def _kernel_layout(q: Array, k: Array, v: Array, chunk: int):
+    """[b,h,n,d] q + [b,hk,n,·] k/v  ->  padded [b·hk, ...] kernel layout.
+
+    Padding rules (zero everywhere):
+      head dim -> 128 lanes; sequence -> chunk multiple; d_v -> 128 lanes.
+    Padded K/V rows are all-zero so every moment contribution vanishes;
+    padded D columns add 0 to every dot product (see DESIGN.md).
+    """
+    dims = _layout_dims(q, k, v, chunk)
+    qg = q.reshape(dims.b, dims.hk, dims.g, dims.n, dims.d)
+    qg = _pad_to(_pad_to(qg, 4, 128), 3, chunk)
+    kp = _pad_to(_pad_to(k, 3, 128), 2, chunk)
+    vp = _pad_to(_pad_to(v, 3, 128), 2, chunk)
+    bk = dims.b * dims.hk
+    return (
+        qg.reshape(bk, dims.g, dims.n_pad, dims.d_pad),
+        kp.reshape(bk, dims.n_pad, dims.d_pad),
+        vp.reshape(bk, dims.n_pad, dims.dv_pad),
+        dims,
+    )
+
+
+def _grouped_value_layout(x: Array, dims: KernelDims, chunk: int) -> Array:
+    """[b,h,n,dv]-shaped tensors (out, dout) -> the padded grouped layout,
+    under the SAME contract as ``_kernel_layout`` pads v."""
+    x = x.reshape(dims.b, dims.hk, dims.g, dims.n, dims.dv)
+    x = _pad_to(_pad_to(x, 4, 128), 3, chunk)
+    return x.reshape(dims.b * dims.hk, dims.g, dims.n_pad, dims.dv_pad)
+
+
+def _effective_alpha(alpha: float, dims: KernelDims) -> float:
+    """The kernel derives its scale from the PADDED head dim; compensate so
+    the logits use the TRUE head dim d (pre-padding)."""
+    if dims.d == dims.d_pad:
+        return alpha
+    return alpha * (dims.d**0.5) / (dims.d_pad**0.5)
 
 
 @functools.partial(
@@ -55,38 +131,31 @@ def taylor_attention_kernel(
 ) -> Array:
     """Causal Taylor linear attention via the Pallas kernel.  Output
     [b, h, n, dv]."""
-    b, h, n, d = q.shape
-    hk = k.shape[1]
-    dv = v.shape[-1]
-    g = h // hk
     if normalize_qk:
         q = layernorm_no_affine(q).astype(q.dtype)
         k = layernorm_no_affine(k).astype(k.dtype)
 
-    # NOTE: the scale uses the TRUE head dim d (pre-padding).
-    alpha_eff = alpha * (d**0.5) / 128.0**0.5 if d != 128 else alpha
-
-    qg = q.reshape(b, hk, g, n, d)
-    # pad: head dim -> 128 lanes; seq -> chunk multiple; dv -> 128 lanes
-    qg = _pad_to(_pad_to(qg, 4, 128), 3, chunk)
-    kp = _pad_to(_pad_to(k, 3, 128), 2, chunk)
-    vp = _pad_to(_pad_to(v, 3, 128), 2, chunk)
-    n_pad = qg.shape[3]
-    d_pad = qg.shape[4]
-    dv_pad = vp.shape[3]
-
+    qp, kp, vp, dims = _kernel_layout(q, k, v, chunk)
     out = taylor_fwd_pallas(
-        qg.reshape(b * hk, g, n_pad, d_pad),
-        kp.reshape(b * hk, n_pad, d_pad),
-        vp.reshape(b * hk, n_pad, dv_pad),
-        alpha=alpha_eff,
+        qp,
+        kp,
+        vp,
+        alpha=_effective_alpha(alpha, dims),
         order=order,
         chunk=chunk,
-        dv_tile=min(dv_pad, 128),
+        dv_tile=min(dims.dv_pad, 128),
         interpret=interpret,
     )
-    out = out.reshape(b, hk, g, n_pad, dv_pad)[:, :, :, :n, :dv]
-    return out.reshape(b, h, n, dv)
+    out = out.reshape(dims.b, dims.hk, dims.g, dims.n_pad, dims.dv_pad)
+    out = out[:, :, :, : dims.n, : dims.dv]
+    return out.reshape(dims.b, dims.h, dims.n, dims.dv)
+
+
+def _pallas_bwd_ok(cfg: TaylorConfig, dims: KernelDims) -> bool:
+    """The Pallas backward covers the forward kernel's envelope minus d_v
+    tiling (dden couples all value columns): d ≤ 128, d_v ≤ 128 after
+    padding, full (non-symmetric) second moment."""
+    return dims.d_pad <= 128 and dims.dv_pad <= 128 and not cfg.sym_state
 
 
 def taylor_attention_kernel_trainable(
@@ -96,10 +165,26 @@ def taylor_attention_kernel_trainable(
     cfg: Optional[TaylorConfig] = None,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool = False,
+    backward: str = "auto",
 ) -> Array:
-    """Differentiable wrapper: Pallas forward + exact two-pass XLA backward
-    (core/taylor_vjp)."""
+    """Differentiable wrapper: Pallas forward + Pallas two-pass backward.
+
+    ``backward``: "auto" (Pallas whenever the config fits its envelope,
+    else the XLA taylor_vjp recompute), "pallas" (force; asserts the
+    envelope), or "xla" (force the reference oracle — used by parity tests
+    and as the d>128 / sym_state fallback).
+    """
     cfg = cfg or TaylorConfig()
+    if backward not in ("auto", "pallas", "xla"):
+        raise ValueError(f"backward must be auto|pallas|xla, got {backward!r}")
+    if cfg.minus_one:
+        # The Pallas forward hardcodes the standard +1 expansion; silently
+        # training the §3 variant against mismatched gradients is worse
+        # than refusing.  Use core/taylor.py paths for minus_one.
+        raise NotImplementedError(
+            "taylor_attention_kernel_trainable does not support minus_one; "
+            "use taylor_attention_chunked"
+        )
 
     @jax.custom_vjp
     def fwd(q, k, v):
@@ -109,18 +194,61 @@ def taylor_attention_kernel_trainable(
         )
 
     def fwd_rule(q, k, v):
-        return fwd(q, k, v), (q, k, v)
+        out = fwd(q, k, v)
+        # out is saved as a residual: the Pallas dq kernel derives the
+        # denominator cotangent from it instead of recomputing the numerator
+        # (the flash-attention trick — see kernel_bwd.py).
+        return out, (q, k, v, out)
 
-    def bwd_rule(res, dout):
+    def bwd_xla(res, dout):
+        import dataclasses  # noqa: PLC0415
+
         from repro.core.taylor_vjp import _bwd_rule  # noqa: PLC0415
 
-        q, k, v = res
+        q, k, v, _ = res
         b, h, n, d = q.shape
         hk = k.shape[1]
         qg = q.reshape(b, hk, h // hk, n, d)
         dog = dout.reshape(b, hk, h // hk, n, v.shape[-1])
-        dq, dk, dv = _bwd_rule(cfg, chunk, (qg, k, v), dog)
+        # taylor_vjp's tiled backward is written for the FULL second moment;
+        # sym_state is an exact compression, so dropping it changes nothing.
+        bcfg = dataclasses.replace(cfg, sym_state=False)
+        dq, dk, dv = _bwd_rule(bcfg, chunk, (qg, k, v), dog)
         return dq.reshape(q.shape), dk, dv
+
+    def bwd_rule(res, dout):
+        q, k, v, out = res
+        dims = _layout_dims(q, k, v, chunk)  # shapes only: no padding yet
+        if backward == "pallas":
+            if not _pallas_bwd_ok(cfg, dims):  # not assert: survives -O
+                raise ValueError(
+                    f"Pallas backward envelope exceeded: {dims} / {cfg}"
+                )
+        elif backward == "xla" or not _pallas_bwd_ok(cfg, dims):
+            return bwd_xla(res, dout)
+
+        qp, kp, vp, _ = _kernel_layout(q, k, v, chunk)
+        # dout/out padded under the SAME contract as v: padded dout rows and
+        # columns are zero, so every state-gradient contribution of a padded
+        # row vanishes in-kernel (out only ever multiplies dout elementwise).
+        dq, dk, dv_ = taylor_bwd_pallas(
+            qp,
+            kp,
+            vp,
+            _grouped_value_layout(dout, dims, chunk),
+            _grouped_value_layout(out, dims, chunk),
+            alpha=_effective_alpha(cfg.alpha, dims),
+            order=cfg.order,
+            chunk=chunk,
+            interpret=interpret,
+        )
+        dq = dq.reshape(dims.b, dims.hk, dims.g, dims.n_pad, dims.d_pad)
+        dq = dq[:, :, :, : dims.n, : dims.d].reshape(q.shape).astype(q.dtype)
+        dk = dk.reshape(dims.b, dims.hk, dims.n_pad, dims.d_pad)
+        dk = dk[:, :, : dims.n, : dims.d].astype(k.dtype)
+        dv_ = dv_.reshape(dims.b, dims.hk, dims.n_pad, dims.dv_pad)
+        dv_ = dv_[:, :, : dims.n, : dims.dv].astype(v.dtype)
+        return dq, dk, dv_
 
     fwd.defvjp(fwd_rule, bwd_rule)
 

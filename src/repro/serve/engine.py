@@ -31,6 +31,19 @@ def decode_step(params, token_t: Array, caches, pos, cfg: ModelConfig):
     return lm_decode_step(params, token_t, caches, pos, cfg)
 
 
+# jax.jit wrappers cached per (cfg, n_max): rebuilding them inside generate()
+# discards jit's compilation cache and re-traces prefill/decode on EVERY
+# generation.  ModelConfig is hashable (frozen dataclass), so it keys cleanly.
+@functools.lru_cache(maxsize=32)
+def _jitted_prefill(cfg: ModelConfig, n_max: int):
+    return jax.jit(functools.partial(lm_prefill, cfg=cfg, n_max=n_max))
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_decode_step(cfg: ModelConfig):
+    return jax.jit(functools.partial(lm_decode_step, cfg=cfg), donate_argnums=(2,))
+
+
 def generate(
     params,
     batch: Dict[str, Array],
@@ -43,10 +56,8 @@ def generate(
     """Greedy/sampled generation.  Returns [b, steps] new tokens."""
     prompt_len = batch["tokens"].shape[1]
     n_max = n_max or (prompt_len + steps)
-    prefill_fn = jax.jit(functools.partial(lm_prefill, cfg=cfg, n_max=n_max))
-    step_fn = jax.jit(
-        functools.partial(lm_decode_step, cfg=cfg), donate_argnums=(2,)
-    )
+    prefill_fn = _jitted_prefill(cfg, n_max)
+    step_fn = _jitted_decode_step(cfg)
     logits, caches = prefill_fn(params, batch)
     outs = []
     token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
