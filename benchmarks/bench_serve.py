@@ -1,0 +1,172 @@
+"""Serving throughput: continuous-batching engine vs the per-token loop.
+
+The old execution model (pre-engine ``serve.generate``) is one jit
+dispatch per token and ONE REQUEST BATCH PER CALL — ragged prompts cannot
+share a batch, so concurrent requests serialize.  The engine packs them
+into slots and advances all slots per compiled ``lax.scan`` dispatch.
+
+Rows on the Taylor backend (the paper's O(1)-state decode):
+
+  * ``serve_decode_loop_sequential`` / ``serve_decode_engine_continuous``
+    — headline: DECODE-phase tokens/sec over the same 8 mixed-length
+    requests, prefill excluded on both sides.  The loop serves them one
+    request at a time (its execution model); the engine serves them from
+    8 slots at once.  Acceptance: ≥ 2× speedup.
+  * ``serve_decode_loop_batched`` / ``serve_decode_engine_uniform`` —
+    ablation: uniform prompts, so the old loop CAN batch all 8.  Isolates
+    the scan-vs-per-token-dispatch effect alone (modest on CPU where the
+    step is op-overhead-bound, not dispatch-bound).
+  * ``serve_e2e_*`` — end-to-end wall time (prefill included) on the
+    mixed-length workload.
+  * ``serve_slot_state_bytes`` — per-slot decode-state bytes (the marginal
+    memory of admitting one more stream; context-independent on taylor).
+
+Rows are aggregated into ``BENCH_serve.json`` by benchmarks/run.py
+(schema in README.md §Benchmarks).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.serve import Request, ServeEngine, generate_loop
+from repro.serve.engine import _jitted_decode_step, _jitted_prefill
+
+N_STREAMS = 8
+NEW_TOKENS = 32
+N_MAX = 128
+PROMPT_LEN = 16
+
+
+def _tok_per_s(n_tokens: int, seconds: float) -> float:
+    return n_tokens / max(seconds, 1e-9)
+
+
+def _loop_decode_seconds(params, cfg, prompt) -> float:
+    """Decode-phase wall time of the per-token loop for ONE prompt batch
+    (prefill excluded)."""
+    prefill_fn = _jitted_prefill(cfg, N_MAX)
+    step_fn = _jitted_decode_step(cfg)
+    prompt_len = prompt.shape[1]
+    logits, caches = prefill_fn(params, {"tokens": prompt})
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(token)
+    t0 = time.perf_counter()
+    for i in range(NEW_TOKENS - 1):
+        pos = jnp.asarray(prompt_len + i, jnp.int32)
+        logits, caches = step_fn(params, token, caches, pos)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(token)
+    return time.perf_counter() - t0
+
+
+def _engine_decode_seconds(params, cfg, prompts) -> tuple:
+    """Decode-phase wall time of the engine over a list of prompts
+    (admission prefills excluded)."""
+    eng = ServeEngine(params, cfg, max_slots=N_STREAMS, n_max=N_MAX,
+                      decode_block=16)
+    for p in prompts:
+        eng.submit(Request(tokens=np.asarray(p), max_new_tokens=NEW_TOKENS))
+    eng._admit()
+    jax.block_until_ready(eng.caches)
+    t0 = time.perf_counter()
+    while eng.step():
+        pass
+    dt = time.perf_counter() - t0
+    return dt, eng
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    cfg = get_reduced("qwen2-1.5b")  # taylor backend
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    total = N_STREAMS * NEW_TOKENS
+    lengths = rng.integers(8, 33, N_STREAMS)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab, (int(n),)), np.int32)
+               for n in lengths]
+
+    # -- headline: decode tokens/sec, 8 mixed-length requests --------------
+    # Old execution model: ragged prompts cannot share a batch -> one
+    # request per call, one dispatch per token.
+    def loop_sequential_decode():
+        return sum(
+            _loop_decode_seconds(params, cfg, jnp.asarray(p)[None])
+            for p in prompts
+        )
+
+    loop_sequential_decode()  # warmup/jit (per prompt length)
+    t_seq_dec = loop_sequential_decode()
+    _engine_decode_seconds(params, cfg, prompts)  # warmup/jit
+    t_eng_dec, eng = _engine_decode_seconds(params, cfg, prompts)
+    seq_dec_tps = _tok_per_s(total, t_seq_dec)
+    eng_dec_tps = _tok_per_s(total, t_eng_dec)
+    rows.append(emit("serve_decode_loop_sequential", t_seq_dec * 1e6,
+                     f"tok_s={seq_dec_tps:.1f}"))
+    rows.append(emit(
+        "serve_decode_engine_continuous", t_eng_dec * 1e6,
+        f"tok_s={eng_dec_tps:.1f};"
+        f"speedup_vs_loop={eng_dec_tps / seq_dec_tps:.2f}",
+    ))
+    rows.append(emit(
+        "serve_slot_state_bytes", 0.0,
+        f"bytes_per_slot={eng.slot_state_bytes};slots={N_STREAMS};"
+        f"backend=taylor(state O(1) in context)",
+    ))
+
+    # -- ablation: uniform prompts, old loop batches all 8 ------------------
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, (N_STREAMS, PROMPT_LEN)), jnp.int32
+    )
+    _loop_decode_seconds(params, cfg, prompt)  # warmup/jit
+    t_loop = _loop_decode_seconds(params, cfg, prompt)
+    uniform = [np.asarray(prompt[i]) for i in range(N_STREAMS)]
+    _engine_decode_seconds(params, cfg, uniform)  # warmup/jit
+    t_eng, _ = _engine_decode_seconds(params, cfg, uniform)
+    loop_tps, eng_tps = _tok_per_s(total, t_loop), _tok_per_s(total, t_eng)
+    rows.append(emit("serve_decode_loop_batched", t_loop * 1e6,
+                     f"tok_s={loop_tps:.1f}"))
+    rows.append(emit(
+        "serve_decode_engine_uniform", t_eng * 1e6,
+        f"tok_s={eng_tps:.1f};speedup_vs_loop={eng_tps / loop_tps:.2f}",
+    ))
+
+    def loop_sequential():
+        for p in prompts:
+            generate_loop(params, {"tokens": jnp.asarray(p)[None]}, cfg,
+                          steps=NEW_TOKENS, n_max=N_MAX)
+
+    def engine_mixed():
+        eng = ServeEngine(params, cfg, max_slots=N_STREAMS, n_max=N_MAX,
+                          decode_block=16)
+        for p in prompts:
+            eng.submit(Request(tokens=p, max_new_tokens=NEW_TOKENS))
+        eng.run()
+
+    loop_sequential()  # warmup/jit
+    t0 = time.perf_counter()
+    loop_sequential()
+    t_seq = time.perf_counter() - t0
+    engine_mixed()  # warmup/jit
+    t0 = time.perf_counter()
+    engine_mixed()
+    t_cb = time.perf_counter() - t0
+    seq_tps, cb_tps = _tok_per_s(total, t_seq), _tok_per_s(total, t_cb)
+    rows.append(emit("serve_e2e_loop_sequential", t_seq * 1e6,
+                     f"tok_s={seq_tps:.1f}"))
+    rows.append(emit(
+        "serve_e2e_engine_continuous", t_cb * 1e6,
+        f"tok_s={cb_tps:.1f};speedup_vs_loop={cb_tps / seq_tps:.2f}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

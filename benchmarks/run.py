@@ -6,10 +6,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_kernel       — Pallas kernels vs reference (hardware adaptation)
   bench_quality      — §5 "Application" (left empty in the paper)
   bench_longcontext  — O(1)-state decode economics (beyond-paper)
+  bench_serve        — continuous-batching engine vs per-token loop
 
-Additionally writes ``BENCH_kernel.json`` (name -> {us_per_call, derived})
-next to this file so the kernel perf trajectory is machine-readable across
-PRs, not just printed.
+Additionally writes ``BENCH_kernel.json`` and ``BENCH_serve.json``
+(name -> {us_per_call, derived}) next to this file so the kernel and
+serving perf trajectories are machine-readable across PRs, not just
+printed.  Schema documented in README.md §Benchmarks.
 """
 
 from __future__ import annotations
@@ -36,27 +38,30 @@ def main() -> None:
         bench_kernel,
         bench_longcontext,
         bench_quality,
+        bench_serve,
     )
 
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
-    kernel_rows = {}
+    json_rows = {"bench_kernel": {}, "bench_serve": {}}
     for mod in (bench_approx, bench_complexity, bench_kernel,
-                bench_longcontext, bench_quality):
+                bench_longcontext, bench_quality, bench_serve):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
             rows = mod.run()
-            if name == "bench_kernel":
-                kernel_rows = _parse_rows(rows)
+            if name in json_rows:
+                json_rows[name] = _parse_rows(rows)
         except Exception as e:  # pragma: no cover
             failures.append((name, e))
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
-    if kernel_rows:
-        out_path = pathlib.Path(__file__).parent / "BENCH_kernel.json"
-        out_path.write_text(json.dumps(kernel_rows, indent=2) + "\n")
-        print(f"# wrote {out_path}")
+    for name, out_name in (("bench_kernel", "BENCH_kernel.json"),
+                           ("bench_serve", "BENCH_serve.json")):
+        if json_rows[name]:
+            out_path = pathlib.Path(__file__).parent / out_name
+            out_path.write_text(json.dumps(json_rows[name], indent=2) + "\n")
+            print(f"# wrote {out_path}")
     print(f"# total wall: {time.time() - t0:.1f}s")
     if failures:
         sys.exit(1)

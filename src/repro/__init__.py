@@ -1,0 +1,16 @@
+"""repro — Higher Order (Taylor) Linear Transformer reproduction.
+
+Package-level runtime configuration only; all functionality lives in the
+subpackages (``repro.core``, ``repro.models``, ``repro.serve`` …).
+"""
+
+import jax
+
+# Random draws must be invariant to sharding: with the legacy
+# (non-partitionable) threefry lowering, jit with sharded out_shardings
+# changes the values `jax.random` produces, so a model initialised on a
+# 2x4 mesh differs from the same seed initialised on one device (this was
+# the root cause of the sharded-vs-single-device training mismatch; see
+# DESIGN.md §Serving/§2).  Elastic resharding and the single-device test
+# oracles both require seed-determinism independent of the mesh.
+jax.config.update("jax_threefry_partitionable", True)

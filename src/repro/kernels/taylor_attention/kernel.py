@@ -192,6 +192,26 @@ def taylor_fwd_pallas(
     dv_tile: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """Raw Pallas forward: causal Taylor attention in kernel layout.
+
+    Expects inputs already normalised and zero-padded by
+    ``ops._kernel_layout`` (head dim ≤ 128 lanes, sequence a multiple of
+    ``chunk``).  Use ``ops.taylor_attention_kernel`` unless you are doing
+    kernel work.
+
+    Args:
+      q: grouped queries ``[b·hk, g, n, d]`` (g = h // hk query groups).
+      k: keys ``[b·hk, n, d]``.
+      v: values ``[b·hk, n, dv]``.
+      alpha: logit scale (already padding-compensated by the wrapper).
+      order: Taylor expansion order of exp, 1 or 2.
+      chunk: chunk size of the grid's sequence axis (static).
+      dv_tile: value-column tile per program (static; dv % dv_tile == 0).
+      interpret: run under the Pallas interpreter (CPU/tests).
+
+    Returns:
+      Attention output ``[b·hk, g, n, dv]`` (f32), still padded.
+    """
     bk, g, n, d = q.shape
     dv = v.shape[-1]
     assert n % chunk == 0, (n, chunk)

@@ -129,8 +129,27 @@ def taylor_attention_kernel(
     interpret: bool = False,
     normalize_qk: bool = True,
 ) -> Array:
-    """Causal Taylor linear attention via the Pallas kernel.  Output
-    [b, h, n, dv]."""
+    """Causal Taylor linear attention via the Pallas forward kernel.
+
+    Handles GQA grouping and the zero-padding contract (head dim / d_v to
+    128 lanes, sequence to a chunk multiple) around the raw kernel; see
+    the module docstring and DESIGN.md §Zero-padding.
+
+    Args:
+      q: queries ``[b, h, n, d]``.
+      k: keys ``[b, hk, n, d]`` with ``h % hk == 0`` (GQA/MQA).
+      v: values ``[b, hk, n, dv]``.
+      alpha: the paper's logit scale — scores are ``q·k / (alpha·√d)``
+        with the TRUE head dim d (padding is compensated internally).
+      order: Taylor expansion order of exp, 1 or 2.
+      chunk: sequence chunk size of the kernel's scan (static).
+      interpret: run the kernel under the Pallas interpreter (CPU/tests).
+      normalize_qk: apply the paper's affine-free LayerNorm to q and k
+        before the kernel.
+
+    Returns:
+      Attention output ``[b, h, n, dv]`` in v's dtype.
+    """
     if normalize_qk:
         q = layernorm_no_affine(q).astype(q.dtype)
         k = layernorm_no_affine(k).astype(k.dtype)
@@ -167,12 +186,29 @@ def taylor_attention_kernel_trainable(
     interpret: bool = False,
     backward: str = "auto",
 ) -> Array:
-    """Differentiable wrapper: Pallas forward + Pallas two-pass backward.
+    """Differentiable Taylor attention: Pallas forward + two-pass backward.
 
-    ``backward``: "auto" (Pallas whenever the config fits its envelope,
-    else the XLA taylor_vjp recompute), "pallas" (force; asserts the
-    envelope), or "xla" (force the reference oracle — used by parity tests
-    and as the d>128 / sym_state fallback).
+    Training entry point — a custom VJP whose backward is the Pallas
+    kernel pair (kernel_bwd.py) whenever the config fits its envelope
+    (d ≤ 128 and d_v ≤ 128 after padding, full second moment), and the
+    exact XLA chunked recompute (core/taylor_vjp.py) otherwise.
+
+    Args:
+      q: queries ``[b, h, n, d]``.
+      k: keys ``[b, hk, n, d]`` with ``h % hk == 0`` (GQA/MQA).
+      v: values ``[b, hk, n, dv]``.
+      cfg: TaylorConfig (alpha/order/normalize_qk; ``minus_one`` is
+        rejected — the Pallas forward hardcodes the +1 expansion, and
+        silently training the §3 variant against mismatched gradients
+        would be worse than refusing).
+      chunk: sequence chunk size of the kernel scan (static).
+      interpret: run the kernels under the Pallas interpreter (CPU/tests).
+      backward: "auto" (Pallas when the envelope fits, else XLA),
+        "pallas" (force; raises outside the envelope), or "xla" (force
+        the reference oracle — parity tests and d>128/sym_state fallback).
+
+    Returns:
+      Attention output ``[b, h, n, dv]``, differentiable w.r.t. q/k/v.
     """
     cfg = cfg or TaylorConfig()
     if backward not in ("auto", "pallas", "xla"):

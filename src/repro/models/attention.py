@@ -38,11 +38,15 @@ Array = jax.Array
 
 
 class KVCache(NamedTuple):
-    """Ring-less fixed-capacity KV cache (softmax backend)."""
+    """Ring-less fixed-capacity KV cache (softmax backend).
+
+    ``length`` is per batch row ([b] int32): in slotted serving every slot
+    decodes at its own position, so the number of valid cache entries is a
+    per-slot quantity (see repro/serve/slots.py)."""
 
     k: Array  # [b, hk, n_max, hd]
     v: Array  # [b, hk, n_max, hd]
-    length: Array  # scalar int32 — tokens written
+    length: Array  # [b] int32 — valid tokens written per batch row/slot
 
 
 AttnCache = Union[KVCache, TaylorState]
@@ -166,11 +170,24 @@ def attention_apply(
 
 
 def init_cache(cfg: ModelConfig, batch: int, n_max: int, dtype=jnp.bfloat16) -> AttnCache:
+    """Zero decode cache for one attention block.
+
+    Args:
+      cfg: model config (``cfg.attention`` picks the cache kind).
+      batch: number of batch rows / serving slots.
+      n_max: KV capacity in tokens (ignored by the taylor backend, whose
+        moment state is O(1) in context length).
+      dtype: KV-cache dtype (the taylor moments are always f32).
+
+    Returns:
+      ``TaylorState`` (taylor) or ``KVCache`` (softmax / linear_elu) with
+      per-row ``length`` zeros.
+    """
     hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     if cfg.attention == "taylor":
         return init_taylor_state(batch, hk, hd, hd, cfg.taylor)
     z = jnp.zeros((batch, hk, n_max, hd), dtype)
-    return KVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+    return KVCache(k=z, v=z, length=jnp.zeros((batch,), jnp.int32))
 
 
 def attention_prefill(
@@ -212,7 +229,7 @@ def attention_prefill(
     hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     cache_k = jnp.zeros((b, hk, n_max, hd), k.dtype).at[:, :, :n].set(k)
     cache_v = jnp.zeros((b, hk, n_max, hd), v.dtype).at[:, :, :n].set(v)
-    return o, KVCache(k=cache_k, v=cache_v, length=jnp.asarray(n, jnp.int32))
+    return o, KVCache(k=cache_k, v=cache_v, length=jnp.full((b,), n, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +242,26 @@ def attention_decode(
     x_t: Array,  # [b, d]
     cache: AttnCache,
     cfg: ModelConfig,
-    pos: Array,  # scalar int32: 0-based position of this token
+    pos: Array,  # scalar or [b] int32: 0-based position of this token
 ) -> Tuple[Array, AttnCache]:
+    """One decode step against the cache.
+
+    Args:
+      params: attention block params (wq/wk/wv/wo).
+      x_t: current-token activations ``[b, d_model]``.
+      cache: ``TaylorState`` or ``KVCache`` for this layer.
+      cfg: model config.
+      pos: 0-based position of this token — a scalar (whole batch at one
+        position) or a ``[b]`` vector (slotted serving: each batch row /
+        slot decodes at its own position).
+
+    Returns:
+      ``(y_t [b, d_model], new_cache)``.  The new token attends to itself
+      (inclusive causal semantics), so its k/v is written before the read.
+    """
     b, d = x_t.shape
     dtype = x_t.dtype
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q = jnp.einsum("bd,dhk->bhk", x_t, params["wq"]["w"].astype(dtype))
     k = jnp.einsum("bd,dhk->bhk", x_t, params["wk"]["w"].astype(dtype))
     v = jnp.einsum("bd,dhk->bhk", x_t, params["wv"]["w"].astype(dtype))
@@ -237,15 +270,23 @@ def attention_decode(
         k = k + params["wk"]["b"].astype(dtype)
         v = v + params["wv"]["b"].astype(dtype)
     if cfg.pos == "rope":
-        q = apply_rope(q[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0, :]
-        k = apply_rope(k[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0, :]
+        # positions [b, 1, 1] broadcast against [b, h, 1, hd] inside rope.
+        q = apply_rope(q[:, :, None, :], pos_b[:, None, None], cfg.rope_theta)[:, :, 0, :]
+        k = apply_rope(k[:, :, None, :], pos_b[:, None, None], cfg.rope_theta)[:, :, 0, :]
 
     if cfg.attention == "taylor":
         o, cache = taylor_decode_step(cache, q, k, v, cfg.taylor)
     else:
-        new_k = jax.lax.dynamic_update_index_in_dim(cache.k, k.astype(cache.k.dtype), pos, 2)
-        new_v = jax.lax.dynamic_update_index_in_dim(cache.v, v.astype(cache.v.dtype), pos, 2)
-        cache = KVCache(k=new_k, v=new_v, length=pos + 1)
+        # Per-row scatter: each slot writes its k/v at its own position.
+        # Retired slots keep a frozen pos; clamp so they can never write
+        # out of bounds (their slot is fully overwritten on re-admission).
+        idx = jnp.minimum(pos_b, cache.k.shape[2] - 1)
+        upd = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_index_in_dim(c, u, i, 1)
+        )
+        new_k = upd(cache.k, k.astype(cache.k.dtype), idx)
+        new_v = upd(cache.v, v.astype(cache.v.dtype), idx)
+        cache = KVCache(k=new_k, v=new_v, length=pos_b + 1)
         o = softmax_decode_step(q, cache.k, cache.v, cache.length)
 
     y = jnp.einsum("bhk,hkd->bd", o.astype(dtype), params["wo"]["w"].astype(dtype))
@@ -274,7 +315,9 @@ def cross_prefill(params, kv_src: Array, cfg: ModelConfig) -> CrossCache:
             k.shape[0], k.shape[1], k.shape[-1], v.shape[-1], cfg.taylor
         )
         return CrossCache(kv=_state_update(state, kn, v, cfg.taylor))
-    return CrossCache(kv=KVCache(k=k, v=v, length=jnp.asarray(k.shape[2], jnp.int32)))
+    return CrossCache(
+        kv=KVCache(k=k, v=v, length=jnp.full((k.shape[0],), k.shape[2], jnp.int32))
+    )
 
 
 def cross_decode(params, x_t: Array, cache: CrossCache, cfg: ModelConfig) -> Array:

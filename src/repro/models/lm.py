@@ -288,18 +288,19 @@ def lm_prefill(
 def lm_decode_step(
     params, token_t: Array, caches, pos, cfg: ModelConfig
 ) -> Tuple[Array, Any]:
-    """One decode step.  token_t: [b] int32; pos: scalar int32 (0-based
-    position of this token).  Returns (logits [b, vocab], new caches)."""
+    """One decode step.  token_t: [b] int32; pos: scalar or [b] int32
+    (0-based position of this token — a vector gives every batch row /
+    serving slot its own position).  Returns (logits [b, vocab], new
+    caches)."""
     dtype = jnp.dtype(cfg.dtype)
     x_t = embed_apply(params["embed"], token_t, dtype)
     if cfg.embed_scale:
         x_t = x_t * jnp.asarray(cfg.d_model**0.5, dtype)
     if cfg.pos == "learned":
-        x_t = x_t + jax.lax.dynamic_index_in_dim(
-            params["pos_embed"], pos, 0, keepdims=False
-        ).astype(dtype)[None]
+        # scalar pos -> [d] broadcast over batch; [b] pos -> [b, d].
+        x_t = x_t + jnp.take(params["pos_embed"], pos, axis=0).astype(dtype)
     elif cfg.pos == "sinusoidal":
-        x_t = x_t + sinusoidal_pos(pos[None], cfg.d_model).astype(dtype)
+        x_t = x_t + sinusoidal_pos(jnp.atleast_1d(pos), cfg.d_model).astype(dtype)
     blocks = params["blocks"]
     shared = blocks.get("shared")
     kv_src = caches.get("kv_src")
@@ -368,7 +369,9 @@ def lm_init_caches(
             cc = CrossCache(kv=init_taylor_state(batch, hk, hd, hd, cfg.taylor))
         else:
             z = jnp.zeros((batch, hk, n_src, hd), dtype)
-            cc = CrossCache(kv=KVCache(k=z, v=z, length=jnp.asarray(n_src, jnp.int32)))
+            cc = CrossCache(
+                kv=KVCache(k=z, v=z, length=jnp.full((batch,), n_src, jnp.int32))
+            )
         return (self_cache, cc)
 
     def stack(tree, rl):

@@ -1,5 +1,39 @@
-"""Serving: prefill/decode engine with batched generation."""
+"""Serving: continuous-batching engine over a slotted Taylor-state cache.
 
-from repro.serve.engine import decode_step, generate, prefill
+``ServeEngine`` + ``Request`` are the serving API (scheduler.py);
+``generate`` is the batch-convenience wrapper; ``generate_loop`` keeps the
+original per-token dispatch loop as the parity/benchmark baseline.
+"""
 
-__all__ = ["decode_step", "generate", "prefill"]
+from repro.serve.engine import (
+    decode_scan,
+    decode_step,
+    generate,
+    generate_loop,
+    prefill,
+    sample_tokens,
+)
+from repro.serve.scheduler import Request, ServeEngine
+from repro.serve.slots import (
+    clear_slot,
+    init_slot_caches,
+    read_slot,
+    slot_bytes,
+    write_slot,
+)
+
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "clear_slot",
+    "decode_scan",
+    "decode_step",
+    "generate",
+    "generate_loop",
+    "init_slot_caches",
+    "prefill",
+    "read_slot",
+    "sample_tokens",
+    "slot_bytes",
+    "write_slot",
+]

@@ -1,10 +1,15 @@
-"""Inference engine.
+"""Inference engine: compiled building blocks + compatibility wrappers.
 
-``prefill`` runs the prompt and materialises per-layer decode caches
-(KV caches for softmax; O(1) Taylor moment states for the paper's backend —
-the state size is independent of context length, which is the whole point
-at 500k context).  ``decode_step`` advances one token for the whole batch.
-``generate`` is the convenience greedy loop used by examples/tests.
+The serving execution model is continuous batching (``scheduler.py``):
+``max_slots`` requests decode together from a slot-indexed cache
+(``slots.py``), and ``decode_scan`` advances ALL slots by a block of tokens
+in ONE device dispatch — a ``jax.lax.scan`` over ``lm_decode_step`` with
+per-slot position, stop and sampling state.  This file owns the compiled
+pieces; the scheduler owns admission and slot lifecycle.
+
+``generate`` is kept as a thin compatibility wrapper over the engine (same
+signature as the original per-token loop); ``generate_loop`` preserves the
+old one-dispatch-per-token loop as the parity/benchmark baseline.
 """
 
 from __future__ import annotations
@@ -22,16 +27,42 @@ Array = jax.Array
 
 
 def prefill(params, batch: Dict[str, Array], cfg: ModelConfig, n_max: int):
-    """Returns (last-position logits [b, vocab], caches)."""
+    """Run the prompt and materialise per-layer decode caches.
+
+    Args:
+      params: model params from ``lm_init``.
+      batch: ``{"tokens": [b, n] int32, ...}`` plus family extras
+        (``image_embeds`` / ``audio_frames``).
+      cfg: model config.
+      n_max: KV capacity to allocate (softmax backend; the taylor moment
+        state is O(1) in context length).
+
+    Returns:
+      ``(logits [b, vocab]`` for the last prompt position``, caches)`` —
+      the cache pytree ``lm_prefill`` defines.  For the taylor backend the
+      caches hold the final chunk-scan moment state (``return_state=True``
+      handoff), exactly the state token-by-token decode would have reached.
+    """
     return lm_prefill(params, batch, cfg, n_max)
 
 
 def decode_step(params, token_t: Array, caches, pos, cfg: ModelConfig):
-    """One greedy step: returns (logits [b, vocab], new caches)."""
+    """Advance one token for the whole batch.
+
+    Args:
+      params: model params.
+      token_t: ``[b]`` int32 current tokens.
+      caches: cache pytree from ``prefill`` / ``slots.init_slot_caches``.
+      pos: scalar or ``[b]`` int32 0-based position of ``token_t``.
+      cfg: model config.
+
+    Returns:
+      ``(logits [b, vocab], new caches)``.
+    """
     return lm_decode_step(params, token_t, caches, pos, cfg)
 
 
-# jax.jit wrappers cached per (cfg, n_max): rebuilding them inside generate()
+# jax.jit wrappers cached per (cfg, ...): rebuilding them inside generate()
 # discards jit's compilation cache and re-traces prefill/decode on EVERY
 # generation.  ModelConfig is hashable (frozen dataclass), so it keys cleanly.
 @functools.lru_cache(maxsize=32)
@@ -44,6 +75,147 @@ def _jitted_decode_step(cfg: ModelConfig):
     return jax.jit(functools.partial(lm_decode_step, cfg=cfg), donate_argnums=(2,))
 
 
+# ---------------------------------------------------------------------------
+# Per-slot sampling
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(
+    logits: Array,
+    rng: Array,
+    temperature: Array,
+    top_k: Array,
+    max_top_k: Optional[int] = None,
+) -> Array:
+    """Per-slot next-token sampling: greedy / temperature / top-k.
+
+    Args:
+      logits: ``[s, vocab]`` f32 next-token logits (one row per slot).
+      rng: PRNG key consumed by the categorical draw.
+      temperature: ``[s]`` f32; ``0`` selects greedy argmax for that slot.
+      top_k: ``[s]`` int32; ``> 0`` restricts sampling to the k
+        highest-logit tokens for that slot, ``0`` disables the filter.
+      max_top_k: static upper bound on ``top_k`` (the scheduler knows it
+        host-side).  ``0`` skips the top-k threshold entirely; ``None``
+        falls back to a full-vocab sort (general but O(V log V) — avoid
+        in compiled hot loops).
+
+    Returns:
+      ``[s]`` int32 sampled tokens.
+    """
+    vocab = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if max_top_k is None or max_top_k > 0:
+        # Per-slot k-th largest logit as the top-k admission threshold:
+        # lax.top_k with the static bound is O(V·k); the sort fallback is
+        # the arbitrary-k escape hatch.
+        if max_top_k is None:
+            desc = jnp.sort(logits, axis=-1)[:, ::-1]
+        else:
+            desc, _ = jax.lax.top_k(logits, min(max_top_k, vocab))
+        kth = jnp.take_along_axis(
+            desc, jnp.clip(top_k - 1, 0, desc.shape[-1] - 1)[:, None], axis=-1
+        )
+        logits = jnp.where((top_k[:, None] > 0) & (logits < kth), -jnp.inf, logits)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
+# ---------------------------------------------------------------------------
+# Compiled multi-token decode: one dispatch advances all slots by `steps`.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
+    """Compiled ``steps``-token decode over all slots (see ``decode_scan``).
+
+    ``sampling``/``max_top_k`` are static specializations the scheduler
+    derives host-side from the occupied slots: the all-greedy common case
+    compiles to a pure argmax body (no rng, no sort/top_k)."""
+
+    def scan_fn(params, caches, token, pos, active, temperature, top_k, eos_id, rng):
+        def body(carry, _):
+            token, caches, pos, active, rng = carry
+            logits, caches = lm_decode_step(params, token, caches, pos, cfg)
+            if sampling:
+                rng, sub = jax.random.split(rng)
+                nxt = sample_tokens(
+                    logits, sub, temperature, top_k,
+                    None if max_top_k < 0 else max_top_k,
+                )
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # Inactive slots freeze: token and position stop advancing, so
+            # their (dead) state churn can never run out of bounds.
+            nxt = jnp.where(active, nxt, token)
+            pos = jnp.where(active, pos + 1, pos)
+            emitted = active
+            active = active & (nxt != eos_id)
+            return (nxt, caches, pos, active, rng), (nxt, emitted)
+
+        (token, caches, pos, active, rng), (toks, mask) = jax.lax.scan(
+            body, (token, caches, pos, active, rng), None, length=steps
+        )
+        return caches, token, pos, active, rng, toks, mask
+
+    return jax.jit(scan_fn, donate_argnums=(1,))
+
+
+def decode_scan(
+    params,
+    caches,
+    token: Array,
+    pos: Array,
+    active: Array,
+    temperature: Array,
+    top_k: Array,
+    eos_id: Array,
+    rng: Array,
+    cfg: ModelConfig,
+    steps: int,
+    sampling: bool = True,
+    max_top_k: Optional[int] = None,
+):
+    """Advance every slot by ``steps`` tokens in one compiled dispatch.
+
+    A ``lax.scan`` over ``lm_decode_step``: per step each ACTIVE slot feeds
+    its current token at its own position, samples the next token
+    (greedy/temperature/top-k per slot), and goes inactive when it emits its
+    ``eos_id``.  Inactive slots freeze (token/pos held), so one dispatch
+    safely mixes slots at different lifecycle stages.
+
+    Args:
+      params: model params.
+      caches: slotted cache pytree (donated).
+      token: ``[s]`` int32 current token per slot.
+      pos: ``[s]`` int32 position of ``token`` per slot.
+      active: ``[s]`` bool — slots that should decode.
+      temperature: ``[s]`` f32 sampling temperature (0 = greedy).
+      top_k: ``[s]`` int32 top-k filter (0 = off).
+      eos_id: ``[s]`` int32 stop token (-1 = never stops).
+      rng: PRNG key (split once per step).
+      cfg: model config (static).
+      steps: tokens to advance (static — compiled once per value).
+      sampling: static — False compiles a pure-argmax body (all slots
+        greedy), skipping rng and the top-k machinery entirely.
+      max_top_k: static upper bound on ``top_k`` (see ``sample_tokens``).
+
+    Returns:
+      ``(caches, token, pos, active, rng, toks [steps, s], mask
+      [steps, s])`` — ``toks[t, s]`` is valid output iff ``mask[t, s]``.
+    """
+    k = -1 if max_top_k is None else int(max_top_k)
+    fn = _jitted_decode_scan(cfg, steps, bool(sampling), k)
+    return fn(params, caches, token, pos, active, temperature, top_k, eos_id, rng)
+
+
+# ---------------------------------------------------------------------------
+# Generation wrappers
+# ---------------------------------------------------------------------------
+
+
 def generate(
     params,
     batch: Dict[str, Array],
@@ -53,7 +225,73 @@ def generate(
     greedy: bool = True,
     rng: Optional[Array] = None,
 ) -> Array:
-    """Greedy/sampled generation.  Returns [b, steps] new tokens."""
+    """Greedy/sampled generation — thin wrapper over the serve engine.
+
+    Each batch row becomes one engine request; all rows share a prompt
+    length, so they are admitted together and decode as one continuously
+    batched group (token-identical to the old per-token loop for greedy
+    decoding — tested).
+
+    Args:
+      params: model params.
+      batch: ``{"tokens": [b, n] int32, ...}`` plus family extras.
+      cfg: model config.
+      steps: number of new tokens to generate.
+      n_max: KV capacity (default ``prompt_len + steps``).
+      greedy: argmax decoding when True; otherwise temperature-1 sampling
+        driven by ``rng``.
+      rng: PRNG key for sampled decoding.
+
+    Returns:
+      ``[b, steps]`` int32 new tokens.
+    """
+    from repro.serve.scheduler import Request, ServeEngine  # noqa: PLC0415 (cycle)
+
+    import numpy as np  # noqa: PLC0415
+
+    prompt = np.asarray(batch["tokens"])
+    b, prompt_len = prompt.shape
+    n_max = n_max or (prompt_len + steps)
+    temperature = 0.0 if (greedy or rng is None) else 1.0
+    eng = ServeEngine(
+        params, cfg, max_slots=b, n_max=n_max,
+        decode_block=min(steps, 16) or 1, rng=rng,
+    )
+    rids = [
+        eng.submit(Request(
+            tokens=prompt[i],
+            max_new_tokens=steps,
+            temperature=temperature,
+            extras={k: np.asarray(v)[i : i + 1]
+                    for k, v in batch.items() if k != "tokens"},
+        ))
+        for i in range(b)
+    ]
+    outs = eng.run()
+    return jnp.stack([jnp.asarray(outs[r], jnp.int32) for r in rids])
+
+
+def generate_loop(
+    params,
+    batch: Dict[str, Array],
+    cfg: ModelConfig,
+    steps: int,
+    n_max: Optional[int] = None,
+    greedy: bool = True,
+    rng: Optional[Array] = None,
+) -> Array:
+    """The original per-token decode loop (one jit dispatch per token).
+
+    Kept as the parity oracle for the continuous-batching engine and as the
+    benchmark baseline (``benchmarks/bench_serve.py``).  Same contract as
+    ``generate``.
+
+    Args:
+      params, batch, cfg, steps, n_max, greedy, rng: see ``generate``.
+
+    Returns:
+      ``[b, steps]`` int32 new tokens.
+    """
     prompt_len = batch["tokens"].shape[1]
     n_max = n_max or (prompt_len + steps)
     prefill_fn = _jitted_prefill(cfg, n_max)

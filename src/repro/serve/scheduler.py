@@ -1,0 +1,366 @@
+"""Continuous-batching scheduler: slot lifecycle + admission.
+
+``ServeEngine`` packs up to ``max_slots`` concurrent requests into one
+slot-indexed decode cache (``slots.py``) and advances all of them together
+with the compiled block decode (``engine.decode_scan`` — one device
+dispatch per ``decode_block`` tokens, not per token).  Queued requests are
+admitted into free slots *between* blocks: admission prefills the request
+at batch 1 (the chunked Taylor scan hands its final moment state straight
+to the slot via ``return_state=True``) and splices the state in with
+``write_slot`` while every other slot keeps its in-flight context.
+
+Slot lifecycle (see DESIGN.md §Serving):
+
+  FREE --admit(prefill+write_slot)--> ACTIVE --eos / budget--> RETIRED
+   ^                                                             |
+   +----------------------- clear_slot --------------------------+
+
+Per-token cost is independent of how requests arrive: a request admitted
+into a busy batch produces the same tokens as a solo run (tested), because
+slots never interact — every op in the decode step is batch-parallel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serve import slots as slots_mod
+from repro.serve.engine import (
+    _jitted_prefill,
+    decode_scan,
+    sample_tokens,
+)
+from repro.serve.slots import read_slot
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    Attributes:
+      tokens: prompt token ids, ``[n]`` int (list or ndarray).
+      max_new_tokens: generation budget, counting the first token sampled
+        from the prefill logits.
+      temperature: 0 = greedy argmax; > 0 samples at this temperature.
+      top_k: > 0 restricts sampling to the k highest-logit tokens.
+      eos_id: stop token — generation ends once it is emitted (the eos
+        token itself is included in the output).  None = never stop early.
+      extras: extra model inputs with a leading batch-1 axis, e.g.
+        ``image_embeds [1, n_img, vision_dim]`` (vlm) or ``audio_frames``
+        (encdec).
+    """
+
+    tokens: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: Optional[int] = None
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (compile-variant bucketing)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one cache slot."""
+
+    rid: Optional[int] = None     # request id, None = free
+    remaining: int = 0            # new-token budget left
+    done: bool = False            # emitted eos (device went inactive)
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Continuous-batching inference engine over a slotted decode cache.
+
+    Typical use::
+
+        eng = ServeEngine(params, cfg, max_slots=8, n_max=4096)
+        rid = eng.submit(Request(tokens=prompt, max_new_tokens=64))
+        outputs = eng.run()          # {rid: np.ndarray of new tokens}
+
+    ``submit`` only enqueues; ``run`` (or repeated ``step``) drives
+    admission and decoding until every request completes.  Prefill is
+    jit-cached per (cfg, n_max) and re-traced per distinct prompt length —
+    serve with bucketed prompt lengths if that matters.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        max_slots: int,
+        n_max: int,
+        decode_block: int = 16,
+        rng: Optional[Array] = None,
+        cache_dtype=None,
+    ):
+        """Builds the engine and allocates the slotted cache.
+
+        Args:
+          params: model params from ``lm_init``.
+          cfg: model config.
+          max_slots: concurrent requests held on-device.
+          n_max: per-slot context capacity (prompt + generated tokens) —
+            bounds the KV cache on the softmax backend; the taylor moment
+            state is O(1) regardless.
+          decode_block: tokens advanced per device dispatch; admission
+            happens at block boundaries, so this is also the continuous-
+            batching granularity.
+          rng: PRNG key for sampled decoding (defaults to PRNGKey(0)).
+          cache_dtype: KV-cache dtype (defaults to ``cfg.dtype``).
+        """
+        if max_slots < 1 or decode_block < 1:
+            raise ValueError("max_slots and decode_block must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.n_max = n_max
+        self.decode_block = decode_block
+        dtype = jnp.dtype(cache_dtype or cfg.dtype)
+        self.caches = slots_mod.init_slot_caches(cfg, max_slots, n_max, dtype)
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._rid = itertools.count()
+        self._queue: deque = deque()
+        self._requests: Dict[int, Request] = {}
+        self._outputs: Dict[int, np.ndarray] = {}
+        self._slots = [_Slot() for _ in range(max_slots)]
+        # Per-slot device-facing vectors (host copies are authoritative).
+        self._token = np.zeros((max_slots,), np.int32)
+        self._pos = np.zeros((max_slots,), np.int32)
+        self._temp = np.zeros((max_slots,), np.float32)
+        self._topk = np.zeros((max_slots,), np.int32)
+        self._eos = np.full((max_slots,), -1, np.int32)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        """Enqueue a request; returns its id (key into ``run``'s result)."""
+        prompt_len = int(np.asarray(request.tokens).shape[-1])
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt_len + request.max_new_tokens > self.n_max:
+            raise ValueError(
+                f"prompt ({prompt_len}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds n_max ({self.n_max})"
+            )
+        # The slot cache preallocates kv_src/cross-KV leaves at the config's
+        # source length, so every request's extras must match it exactly —
+        # validate here rather than crash in write_slot mid-flight.
+        expected = {}
+        if self.cfg.family == "vlm":
+            expected["image_embeds"] = (1, self.cfg.n_image_tokens,
+                                        self.cfg.vision_dim)
+        elif self.cfg.family == "encdec":
+            expected["audio_frames"] = (1, self.cfg.n_audio_ctx,
+                                        self.cfg.d_model)
+        for name, shape in expected.items():
+            got = tuple(np.asarray(request.extras.get(name, ())).shape)
+            if got != shape:
+                raise ValueError(
+                    f"request extra {name!r} must have shape {shape} (the "
+                    f"slot cache is preallocated from the config), got "
+                    f"{got or 'missing'} — pad/resize the input to the "
+                    f"configured source length"
+                )
+        rid = next(self._rid)
+        self._requests[rid] = request
+        self._queue.append(rid)
+        return rid
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.rid is None]
+
+    def _active_mask(self) -> np.ndarray:
+        return np.array(
+            [s.rid is not None and not s.done and s.remaining > 0
+             for s in self._slots], bool,
+        )
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (between decode blocks).
+
+        Consecutive queued requests with equal prompt length share ONE
+        batched prefill dispatch (their per-request caches are sliced out
+        with ``read_slot`` and spliced into slots), so a burst of
+        same-shape requests — e.g. everything ``generate`` submits — pays
+        one prefill, not one per request."""
+        free = self._free_slots()
+        while free and self._queue:
+            # Longest FIFO run of equal-prompt-length requests that fits
+            # the free slots (extras shapes are uniform per config —
+            # enforced at submit).
+            group = [self._queue.popleft()]
+            glen = np.asarray(self._requests[group[0]].tokens).shape[-1]
+            while (
+                len(group) < len(free)
+                and self._queue
+                and np.asarray(
+                    self._requests[self._queue[0]].tokens
+                ).shape[-1] == glen
+            ):
+                group.append(self._queue.popleft())
+            reqs = [self._requests[rid] for rid in group]
+            batch = {"tokens": jnp.asarray(
+                np.stack([np.asarray(r.tokens) for r in reqs]), jnp.int32
+            )}
+            for k in reqs[0].extras:
+                batch[k] = jnp.asarray(
+                    np.concatenate([np.asarray(r.extras[k]) for r in reqs])
+                )
+            logits, pref_caches = _jitted_prefill(self.cfg, self.n_max)(
+                self.params, batch
+            )
+            self._rng, sub = jax.random.split(self._rng)
+            temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+            topks = jnp.asarray([r.top_k for r in reqs], jnp.int32)
+            firsts = np.asarray(sample_tokens(
+                logits, sub, temps, topks,
+                max_top_k=max(r.top_k for r in reqs),
+            ))
+            for j, (rid, req) in enumerate(zip(group, reqs)):
+                slot = free.pop(0)
+                req_caches = (
+                    pref_caches if len(group) == 1
+                    else read_slot(pref_caches, jnp.asarray(j, jnp.int32))
+                )
+                self.caches = slots_mod.write_slot(
+                    self.caches, req_caches, jnp.asarray(slot, jnp.int32)
+                )
+                first = int(firsts[j])
+                st = self._slots[slot]
+                st.rid, st.out, st.done = rid, [first], False
+                st.remaining = req.max_new_tokens - 1
+                self._token[slot] = first
+                self._pos[slot] = glen
+                self._temp[slot] = req.temperature
+                self._topk[slot] = req.top_k
+                self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+                if req.eos_id is not None and first == req.eos_id:
+                    st.done = True
+
+    def _retire_finished(self) -> None:
+        for i, st in enumerate(self._slots):
+            if st.rid is not None and (st.done or st.remaining <= 0):
+                self._outputs[st.rid] = np.asarray(st.out, np.int32)
+                # drop the Request (prompt + extras) — a long-lived engine
+                # must not accumulate every prompt it ever served
+                self._requests.pop(st.rid, None)
+                self.caches = slots_mod.clear_slot(
+                    self.caches, jnp.asarray(i, jnp.int32)
+                )
+                self._slots[i] = _Slot()
+
+    # -- decoding -----------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit + advance one decode block.  Returns True while work remains.
+
+        One call = at most one ``decode_scan`` dispatch.  Exposed for tests
+        and for callers interleaving submission with decoding; ``run`` just
+        loops it.
+        """
+        self._retire_finished()
+        self._admit()
+        active = self._active_mask()
+        if not active.any():
+            self._retire_finished()
+            return bool(self._queue) or any(
+                s.rid is not None for s in self._slots
+            )
+        steps = min(
+            self.decode_block,
+            max(s.remaining for s in self._slots
+                if s.rid is not None and not s.done),
+        )
+        # steps and max_top_k are static jit keys: bucket both to powers of
+        # two so the number of compiled full-model scan variants stays
+        # O(log) in the values clients supply, not O(distinct values).
+        # Over-decoding a few tokens past the smallest budget is harmless —
+        # the host trims and retired slots freeze.
+        steps = min(self.decode_block, _next_pow2(max(steps, 1)))
+        # Static specialization for the compiled scan: all-greedy batches
+        # (the common case) skip sampling entirely, and top-k is bounded
+        # by the largest k among occupied slots.
+        occupied = [i for i, s in enumerate(self._slots) if s.rid is not None]
+        sampling = any(self._temp[i] > 0 for i in occupied)
+        max_top_k = int(max((self._topk[i] for i in occupied), default=0))
+        max_top_k = _next_pow2(max_top_k) if max_top_k > 0 else 0
+        self._rng, sub = jax.random.split(self._rng)
+        (self.caches, token, pos, dev_active, _, toks, mask) = decode_scan(
+            self.params,
+            self.caches,
+            jnp.asarray(self._token),
+            jnp.asarray(self._pos),
+            jnp.asarray(active),
+            jnp.asarray(self._temp),
+            jnp.asarray(self._topk),
+            jnp.asarray(self._eos),
+            sub,
+            self.cfg,
+            int(steps),
+            sampling=sampling,
+            max_top_k=max_top_k,
+        )
+        toks = np.asarray(toks)
+        mask = np.asarray(mask)
+        # np.array (copy): np.asarray of a jax array is a read-only view,
+        # and _admit writes these in place.
+        self._token = np.array(token, np.int32)
+        self._pos = np.array(pos, np.int32)
+        dev_active = np.asarray(dev_active)
+        for i, st in enumerate(self._slots):
+            if st.rid is None or st.done:
+                continue
+            for t in range(toks.shape[0]):
+                if not mask[t, i] or st.remaining <= 0:
+                    break
+                st.out.append(int(toks[t, i]))
+                st.remaining -= 1
+                if self._eos[i] >= 0 and toks[t, i] == self._eos[i]:
+                    st.done = True
+                    break
+            if not dev_active[i]:
+                st.done = True
+        self._retire_finished()
+        return bool(self._queue) or any(s.rid is not None for s in self._slots)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive admission + decoding until every submitted request is done.
+
+        Drains the finished-output buffer: each request's tokens are
+        returned by exactly one ``run`` call (a long-lived engine must not
+        accumulate every answer it ever produced).
+
+        Returns:
+          ``{rid: np.ndarray[int32]}`` — the new tokens of each request
+          completed since the previous ``run`` (first token sampled from
+          the prefill logits, then decoded tokens, truncated at
+          ``eos_id``/``max_new_tokens``).
+        """
+        while self.step():
+            pass
+        out, self._outputs = self._outputs, {}
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def slot_state_bytes(self) -> int:
+        """Decode-state bytes one slot occupies (memory per admission)."""
+        return slots_mod.slot_bytes(self.caches, self.max_slots)

@@ -1,0 +1,175 @@
+"""Slot-indexed decode-state cache for continuous batching.
+
+The engine holds ONE device-resident cache pytree with a leading slot axis
+on every per-request leaf (built by ``repro.models.lm.lm_init_caches`` with
+``batch = max_slots``).  A slot is the unit of admission: prefill produces a
+batch-1 cache for one request (the chunked Taylor scan's ``return_state``
+handoff), and ``write_slot`` splices it into the live batch without touching
+the other slots — requests therefore join and leave mid-flight while the
+decode step keeps advancing all slots in a single device dispatch.
+
+Cache pytree layout (the exact structure ``lm_prefill`` returns):
+
+  caches["group"]  leaves  [n_groups, run_len, slots, ...]   (slot axis 2)
+  caches["tail"]   leaves  [slots, ...]                      (slot axis 0)
+  caches["kv_src"] leaf    [slots, n_src, d_model] or None   (slot axis 0)
+
+Per-slot state is O(1) in context length on the taylor backend (the paper's
+moment state) and O(n_max) on the softmax backend (bounded KV) — see
+DESIGN.md §Serving for the memory budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_init_caches
+
+Array = jax.Array
+
+# Group caches are stacked [n_groups, run_len, slots, ...] by the prefill
+# scan; tail / kv_src leaves carry the slot axis in front.
+GROUP_SLOT_AXIS = 2
+TAIL_SLOT_AXIS = 0
+
+
+def init_slot_caches(
+    cfg: ModelConfig, max_slots: int, n_max: int, dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    """Zero-initialised slotted decode cache.
+
+    Args:
+      cfg: model config (attention backend picks taylor-state vs KV leaves).
+      max_slots: number of concurrent requests the cache can hold.
+      n_max: per-slot KV capacity in tokens (softmax backend only; the
+        taylor moment state does not depend on it).
+      dtype: KV-cache dtype.
+
+    Returns:
+      The ``{"group", "tail", "kv_src"}`` cache pytree with ``max_slots``
+      batch rows — structurally identical to ``lm_prefill``'s cache output
+      at ``batch = max_slots``.
+    """
+    return lm_init_caches(cfg, max_slots, n_max, dtype)
+
+
+def _splice(full: Array, one: Array, slot: Array, axis: int) -> Array:
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), slot, axis
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slot(caches, request_caches, slot: Array):
+    """Splice a batch-1 request cache (from prefill) into slot ``slot``.
+
+    Args:
+      caches: the live slotted cache pytree (donated — updated in place).
+      request_caches: a batch-1 cache pytree with the same structure, as
+        returned by ``lm_prefill`` for a single request.  For the taylor
+        backend this carries the final chunk-scan moment state
+        (``return_state=True`` handoff); for softmax, the prompt's KV.
+      slot: int32 scalar slot index (traced — one compilation serves all
+        slots).
+
+    Returns:
+      The updated cache pytree; every other slot is bit-identical.
+    """
+    out = dict(caches)
+    out["group"] = jax.tree.map(
+        lambda f, o: _splice(f, o, slot, GROUP_SLOT_AXIS),
+        caches["group"], request_caches["group"],
+    )
+    out["tail"] = jax.tree.map(
+        lambda f, o: _splice(f, o, slot, TAIL_SLOT_AXIS),
+        caches["tail"], request_caches["tail"],
+    )
+    if caches.get("kv_src") is not None:
+        out["kv_src"] = _splice(
+            caches["kv_src"], request_caches["kv_src"], slot, TAIL_SLOT_AXIS
+        )
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def clear_slot(caches, slot: Array):
+    """Zero one slot's state (eviction hygiene).
+
+    Functionally optional — ``write_slot`` fully overwrites a slot on
+    re-admission — but keeps evicted long-context moment state from
+    lingering in memory dumps and makes slot-reuse tests strict.
+
+    Args:
+      caches: the live slotted cache pytree (donated).
+      slot: int32 scalar slot index.
+
+    Returns:
+      The cache pytree with slot ``slot`` zeroed.
+    """
+    def zero(f: Array, axis: int) -> Array:
+        shape = list(f.shape)
+        shape[axis] = 1
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, jnp.zeros(shape, f.dtype), slot, axis
+        )
+
+    out = dict(caches)
+    out["group"] = jax.tree.map(
+        lambda f: zero(f, GROUP_SLOT_AXIS), caches["group"]
+    )
+    out["tail"] = jax.tree.map(lambda f: zero(f, TAIL_SLOT_AXIS), caches["tail"])
+    if caches.get("kv_src") is not None:
+        out["kv_src"] = zero(caches["kv_src"], TAIL_SLOT_AXIS)
+    return out
+
+
+@jax.jit
+def read_slot(caches, slot: Array):
+    """Extract one slot as a batch-1 cache pytree (tests / debugging).
+
+    Args:
+      caches: the live slotted cache pytree.
+      slot: int32 scalar slot index.
+
+    Returns:
+      A batch-1 cache pytree with the same structure ``lm_prefill``
+      produces for a single request.
+    """
+    out = dict(caches)
+    out["group"] = jax.tree.map(
+        lambda f: jax.lax.dynamic_slice_in_dim(f, slot, 1, GROUP_SLOT_AXIS),
+        caches["group"],
+    )
+    out["tail"] = jax.tree.map(
+        lambda f: jax.lax.dynamic_slice_in_dim(f, slot, 1, TAIL_SLOT_AXIS),
+        caches["tail"],
+    )
+    if caches.get("kv_src") is not None:
+        out["kv_src"] = jax.lax.dynamic_slice_in_dim(
+            caches["kv_src"], slot, 1, TAIL_SLOT_AXIS
+        )
+    return out
+
+
+def slot_bytes(caches, max_slots: int) -> int:
+    """Decode-state bytes held per slot.
+
+    Every leaf carries the slot axis, so this is total cache bytes divided
+    by ``max_slots`` — the per-request marginal memory of admission.
+
+    Args:
+      caches: the slotted cache pytree.
+      max_slots: number of slots the cache was built with.
+
+    Returns:
+      Bytes per slot (int).
+    """
+    total = sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(caches)
+    )
+    return total // max_slots

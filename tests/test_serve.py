@@ -1,4 +1,5 @@
-"""Serving engine: generation, taylor-vs-kv cache behaviour, long context."""
+"""Serving engine: generation, taylor-vs-kv cache behaviour, long context,
+continuous batching (slot admission/eviction, scan-decode parity)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +9,7 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import lm_init
 from repro.models.lm import lm_apply, lm_init_caches, lm_prefill
-from repro.serve import generate
+from repro.serve import Request, ServeEngine, generate, generate_loop
 
 
 @pytest.mark.parametrize("backend", ["taylor", "softmax"])
@@ -61,6 +62,151 @@ def test_prefill_state_equals_incremental_decode_state(rng):
     np.testing.assert_allclose(
         np.asarray(logits_pre), np.asarray(logits_dec), atol=2e-3, rtol=2e-3
     )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["taylor", "softmax"])
+def test_scan_decode_matches_per_token_loop(backend, rng):
+    """The compiled block-decode engine must emit token-identical greedy
+    output to the old one-dispatch-per-token loop."""
+    cfg = get_reduced("qwen2-1.5b").replace(attention=backend)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    old = np.asarray(generate_loop(params, {"tokens": prompt}, cfg, steps=8))
+    new = np.asarray(generate(params, {"tokens": prompt}, cfg, steps=8))
+    np.testing.assert_array_equal(old, new)
+
+
+@pytest.mark.parametrize("backend", ["taylor", "softmax"])
+def test_mixed_length_continuous_batching(backend, rng):
+    """Requests with different prompt lengths / budgets decode together;
+    each must match its own solo run exactly (slots never interact)."""
+    cfg = get_reduced("qwen2-1.5b").replace(attention=backend)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, (n,)), np.int32)
+        for n in (16, 9, 21)
+    ]
+    budgets = (6, 9, 4)
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=3)
+    rids = [
+        eng.submit(Request(tokens=p, max_new_tokens=b))
+        for p, b in zip(prompts, budgets)
+    ]
+    outs = eng.run()
+    for p, b, rid in zip(prompts, budgets, rids):
+        solo = np.asarray(
+            generate_loop(params, {"tokens": jnp.asarray(p)[None]}, cfg, steps=b)
+        )[0]
+        np.testing.assert_array_equal(outs[rid], solo)
+
+
+def test_late_admitted_request_matches_solo(rng):
+    """A request submitted while the batch is mid-flight is admitted into a
+    freed slot and still reproduces its solo-run tokens."""
+    cfg = get_reduced("qwen2-1.5b")  # taylor backend
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    p_busy = np.asarray(rng.integers(0, cfg.vocab, (2, 16)), np.int32)
+    p_late = np.asarray(rng.integers(0, cfg.vocab, (11,)), np.int32)
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=2)
+    eng.submit(Request(tokens=p_busy[0], max_new_tokens=12))
+    eng.submit(Request(tokens=p_busy[1], max_new_tokens=4))
+    eng.step()  # both slots busy, several tokens in
+    rid_late = eng.submit(Request(tokens=p_late, max_new_tokens=7))
+    outs = eng.run()
+    solo = np.asarray(
+        generate_loop(params, {"tokens": jnp.asarray(p_late)[None]}, cfg, steps=7)
+    )[0]
+    np.testing.assert_array_equal(outs[rid_late], solo)
+
+
+@pytest.mark.parametrize("backend", ["taylor", "softmax"])
+def test_slot_eviction_and_reuse(backend, rng):
+    """More requests than slots: slots are retired, cleared, and re-admitted;
+    every request (including ones decoding in a reused slot) matches solo."""
+    cfg = get_reduced("smollm-135m").replace(attention=backend)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, (n,)), np.int32)
+        for n in (8, 12, 10, 15, 7)
+    ]
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=48, decode_block=4)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=5)) for p in prompts]
+    outs = eng.run()
+    assert set(outs) == set(rids)
+    for p, rid in zip(prompts, rids):
+        solo = np.asarray(
+            generate_loop(params, {"tokens": jnp.asarray(p)[None]}, cfg, steps=5)
+        )[0]
+        np.testing.assert_array_equal(outs[rid], solo)
+
+
+def test_eos_stops_slot_early(rng):
+    """A slot that emits its eos_id stops there (eos included in output)."""
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(rng.integers(0, cfg.vocab, (16,)), np.int32)
+    solo = np.asarray(
+        generate_loop(params, {"tokens": jnp.asarray(prompt)[None]}, cfg, steps=8)
+    )[0]
+    eos = int(solo[3])  # greedy emits this at step 3: engine must stop there
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=8)
+    rid = eng.submit(Request(tokens=prompt, max_new_tokens=8, eos_id=eos))
+    out = eng.run()[rid]
+    first_eos = int(np.argmax(solo == eos))
+    np.testing.assert_array_equal(out, solo[: first_eos + 1])
+
+
+def test_per_slot_sampling_topk1_equals_greedy(rng):
+    """top_k=1 sampling collapses to argmax, so a sampled slot with k=1 and
+    a greedy slot must produce identical tokens from the same prompt."""
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(rng.integers(0, cfg.vocab, (16,)), np.int32)
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=4)
+    r_greedy = eng.submit(Request(tokens=prompt, max_new_tokens=6))
+    r_top1 = eng.submit(
+        Request(tokens=prompt, max_new_tokens=6, temperature=0.7, top_k=1)
+    )
+    outs = eng.run()
+    np.testing.assert_array_equal(outs[r_greedy], outs[r_top1])
+
+
+def test_sampled_tokens_in_vocab(rng):
+    """Temperature/top-k sampling emits valid vocab ids of the right count."""
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(rng.integers(0, cfg.vocab, (16,)), np.int32)
+    eng = ServeEngine(
+        params, cfg, max_slots=2, n_max=64, decode_block=4,
+        rng=jax.random.PRNGKey(7),
+    )
+    rid = eng.submit(
+        Request(tokens=prompt, max_new_tokens=9, temperature=1.3, top_k=5)
+    )
+    out = eng.run()[rid]
+    assert out.shape == (9,)
+    assert ((out >= 0) & (out < cfg.vocab)).all()
+
+
+def test_submit_rejects_mismatched_kv_src_shape(rng):
+    """The slot cache preallocates kv_src at the config's source length;
+    a request with a different image length must fail loudly at submit,
+    not crash in write_slot mid-flight."""
+    cfg = get_reduced("llama-3.2-vision-11b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(rng.integers(0, cfg.vocab, (8,)), np.int32)
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64)
+    bad_img = np.zeros((1, cfg.n_image_tokens + 4, cfg.vision_dim), np.float32)
+    with pytest.raises(ValueError, match="image_embeds"):
+        eng.submit(Request(tokens=prompt, max_new_tokens=4,
+                           extras={"image_embeds": bad_img}))
+    with pytest.raises(ValueError, match="image_embeds"):
+        eng.submit(Request(tokens=prompt, max_new_tokens=4))  # missing
 
 
 def test_vlm_generation_uses_image(rng):
