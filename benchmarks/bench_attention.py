@@ -1,0 +1,68 @@
+"""Backend×impl matrix through the unified registry API.
+
+Every registered qkv-level backend is timed through the SAME protocol
+call (``backend.apply`` on identical projected q/k/v), one row per
+(backend, impl) pair — the apples-to-apples comparison the registry makes
+possible.  On CPU the Pallas impl runs under the interpreter, so its
+``us_per_call`` is a functional signal only; the ``max_err_vs_xla``
+derived value (taylor pallas vs xla) is the tracked number.
+
+Rows: ``attention_<backend>_<impl>`` — derived carries
+``state_kind``/``supports_cp`` capability flags so the matrix is
+machine-readable across PRs (``BENCH_attention.json``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.backends import available_backends
+from repro.models.config import ModelConfig
+
+B, H, HK, N, D = 1, 4, 2, 256, 64
+
+
+def _cfg(backend: str, impl: str) -> ModelConfig:
+    return ModelConfig(
+        name="bench", family="lm", d_model=H * D, n_heads=H, n_kv_heads=HK,
+        d_ff=4 * H * D, vocab=256, pattern=("attn",), n_groups=1,
+        attention=backend, attn_impl=impl, attn_chunk=128, head_dim=D,
+    )
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, N, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, HK, N, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, HK, N, D)), jnp.float32)
+
+    outs = {}
+    for name, backend in available_backends().items():
+        if backend.level != "qkv":
+            continue  # block-level (ssm) has no q/k/v protocol to time
+        for impl in backend.impls:
+            cfg = _cfg(name, impl)
+            fn = jax.jit(
+                lambda q, k, v, _b=backend, _c=cfg: _b.apply(q, k, v, _c, causal=True)
+            )
+            outs[(name, impl)] = fn(q, k, v)
+            us = time_fn(fn, q, k, v, iters=3, warmup=1)
+            derived = (
+                f"impl={impl};state_kind={backend.state_kind};"
+                f"supports_cp={backend.supports_cp}"
+            )
+            if (name, impl) == ("taylor", "pallas"):
+                err = float(jnp.max(jnp.abs(
+                    outs[("taylor", "pallas")] - outs[("taylor", "xla")]
+                )))
+                derived += f";max_err_vs_xla={err:.2e}"
+            rows.append(emit(f"attention_{name}_{impl}", us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -3,15 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   bench_approx       — paper Figure 1 (Taylor approximation quality)
   bench_complexity   — the linear-complexity claim (§4)
+  bench_attention    — backend×impl matrix through the unified registry API
   bench_kernel       — Pallas kernels vs reference (hardware adaptation)
   bench_quality      — §5 "Application" (left empty in the paper)
   bench_longcontext  — O(1)-state decode economics (beyond-paper)
   bench_serve        — continuous-batching engine vs per-token loop
 
-Additionally writes ``BENCH_kernel.json`` and ``BENCH_serve.json``
-(name -> {us_per_call, derived}) next to this file so the kernel and
-serving perf trajectories are machine-readable across PRs, not just
-printed.  Schema documented in README.md §Benchmarks.
+Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json`` and
+``BENCH_serve.json`` (name -> {us_per_call, derived}) next to this file
+so the backend, kernel and serving perf trajectories are machine-readable
+across PRs, not just printed.  Schema documented in README.md §Benchmarks.
 """
 
 from __future__ import annotations
@@ -34,6 +35,7 @@ def _parse_rows(rows):
 def main() -> None:
     from benchmarks import (
         bench_approx,
+        bench_attention,
         bench_complexity,
         bench_kernel,
         bench_longcontext,
@@ -44,8 +46,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
-    json_rows = {"bench_kernel": {}, "bench_serve": {}}
-    for mod in (bench_approx, bench_complexity, bench_kernel,
+    json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {}}
+    for mod in (bench_approx, bench_complexity, bench_attention, bench_kernel,
                 bench_longcontext, bench_quality, bench_serve):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
@@ -56,7 +58,8 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             failures.append((name, e))
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
-    for name, out_name in (("bench_kernel", "BENCH_kernel.json"),
+    for name, out_name in (("bench_attention", "BENCH_attention.json"),
+                           ("bench_kernel", "BENCH_kernel.json"),
                            ("bench_serve", "BENCH_serve.json")):
         if json_rows[name]:
             out_path = pathlib.Path(__file__).parent / out_name

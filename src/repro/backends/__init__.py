@@ -1,0 +1,50 @@
+"""Unified attention-backend registry.
+
+One protocol (``AttentionBackend``: ``init_cache / apply / prefill /
+decode_step / merge_state`` + capability flags) for every attention
+algorithm in the repo; ``ModelConfig.attention`` resolves through
+``resolve_backend`` and ``ModelConfig.attn_impl`` selects the execution
+engine ("auto" | "xla" | "pallas").  See ``backends/base.py`` for the
+protocol and DESIGN.md §Backend registry for the selection rules.
+
+The four built-ins are registered at import time:
+
+  * ``softmax``    — exact baseline (dense + flash), KV-cache decode.
+  * ``taylor``     — the paper's order-2 Taylor linear attention
+    (XLA chunked scan + the Pallas forward/backward kernel pair).
+  * ``linear_elu`` — Katharopoulos elu+1 baseline.
+  * ``ssm``        — Mamba2/SSD recurrent state (block-level).
+"""
+
+from repro.backends.base import AttentionBackend
+from repro.backends.linear_elu import LinearEluBackend
+from repro.backends.registry import (
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from repro.backends.softmax import SoftmaxBackend
+from repro.backends.ssm import SSMBackend
+from repro.backends.state import AttnCache, CrossCache, KVCache
+from repro.backends.taylor import TaylorBackend
+
+register_backend(SoftmaxBackend())
+register_backend(TaylorBackend())
+register_backend(LinearEluBackend())
+register_backend(SSMBackend())
+
+__all__ = [
+    "AttentionBackend",
+    "AttnCache",
+    "CrossCache",
+    "KVCache",
+    "LinearEluBackend",
+    "SSMBackend",
+    "SoftmaxBackend",
+    "TaylorBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+]

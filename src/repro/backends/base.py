@@ -1,0 +1,165 @@
+"""The attention-backend protocol: one contract for every way this repo
+computes attention (exact softmax, the paper's Taylor linear attention,
+the elu+1 baseline, and the Mamba/SSD state-space block).
+
+A backend is a stateless singleton describing ONE attention algorithm:
+how to run it over a full sequence (train / encoder / parallel prefill),
+how to prefill a prompt into a decode state, how to advance that state by
+one token, and how to merge per-shard states (context parallelism).  The
+model layer (``models/attention.py``, ``models/blocks.py``,
+``models/lm.py``), the serve engine (``serve/slots.py``) and the
+context-parallel wrapper (``core/context_parallel.py``) resolve backends
+exclusively through the registry (``repro.backends.registry``) — adding a
+backend means registering one object here, not editing N dispatch chains.
+
+Two protocol levels (the ``level`` flag):
+
+  * ``"qkv"``   — attention proper: methods take projected q/k/v heads
+    (``[b, h, n, d]`` / single-token ``[b, h, d]``).  Projections and the
+    output matmul stay in ``models/attention.py``.
+  * ``"block"`` — the SSM backend: Mamba fuses its projections, conv and
+    scan, so its methods take the block params and ``[b, n, d_model]``
+    activations instead (see ``backends/ssm.py``).
+
+Capability flags are declarative so dispatch sites (and the registry's
+config validation) never need backend-specific ``if`` chains:
+
+  * ``state_kind``     — ``"kv"`` (O(n) KV cache), ``"moments"`` (the
+    paper's O(1) Taylor moment state), ``"ssm"`` (O(1) SSD state).
+  * ``supports_cross`` — can serve as the cross-attention op of
+    encoder-decoder / VLM blocks.
+  * ``supports_cp``    — has a context-parallel execution (sequence
+    sharded, constant-size state exchanged).
+  * ``impls``          — execution engines selectable via
+    ``ModelConfig.attn_impl`` ("auto" resolves per platform/envelope).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+Array = jax.Array
+
+
+class AttentionBackend:
+    """Base class + protocol of one attention algorithm (see module doc).
+
+    Subclasses override the class-level capability flags and the protocol
+    methods; instances are registered via
+    ``repro.backends.registry.register_backend`` and resolved with
+    ``get_backend(name)`` / ``resolve_backend(cfg)``.
+    """
+
+    name: str = ""
+    level: str = "qkv"  # "qkv" | "block"
+    state_kind: str = "kv"  # "kv" | "moments" | "ssm"
+    supports_cross: bool = False
+    supports_cp: bool = False
+    impls: Tuple[str, ...] = ("xla",)
+
+    # -- config validation / impl selection ---------------------------------
+
+    def validate(self, cfg) -> None:
+        """Raise ``ValueError`` for configs this backend cannot execute.
+
+        Called by ``registry.resolve_backend`` — the single choke point
+        where capability flags are enforced (impl availability, cross /
+        context-parallel support, kernel envelopes)."""
+        if cfg.attn_impl != "auto" and cfg.attn_impl not in self.impls:
+            raise ValueError(
+                f"attention backend {self.name!r} has impls {self.impls}; "
+                f"attn_impl={cfg.attn_impl!r} is not one of them"
+            )
+        uses_cross = self._uses_cross(cfg)
+        if uses_cross and not self.supports_cross:
+            raise ValueError(
+                f"attention backend {self.name!r} does not support "
+                f"cross-attention (supports_cross=False) but the model has "
+                f"cross blocks: {cfg.pattern + cfg.tail}"
+            )
+        if cfg.attn_sharding == "cp" and not self.supports_cp:
+            raise ValueError(
+                f"attention backend {self.name!r} does not support context "
+                "parallelism (supports_cp=False); use attn_sharding='tp'"
+            )
+
+    @staticmethod
+    def _uses_cross(cfg) -> bool:
+        kinds = cfg.pattern + cfg.tail + cfg.encoder_pattern
+        return "cross" in kinds or cfg.family in ("vlm", "encdec")
+
+    def resolve_impl(self, cfg) -> str:
+        """Concrete impl for this run: ``cfg.attn_impl`` unless "auto"."""
+        if cfg.attn_impl != "auto":
+            return cfg.attn_impl
+        return self.impls[0]
+
+    # -- protocol: full-sequence / prefill / decode / state -----------------
+
+    def init_cache(self, cfg, batch: int, n_max: int, dtype) -> Any:
+        """Zero decode state for ``batch`` rows (``n_max`` = KV capacity in
+        tokens; ignored by O(1)-state backends)."""
+        raise NotImplementedError(self.name)
+
+    def apply(self, q: Array, k: Array, v: Array, cfg, *, causal: bool = True) -> Array:
+        """Full-sequence attention (training / encoder / parallel prefill).
+
+        q ``[b, h, n, d]``; k/v ``[b, hk, n, ·]`` (GQA: ``h % hk == 0``).
+        ``causal`` is the EFFECTIVE causality (cross-attention passes
+        False).  Returns ``[b, h, n, dv]``."""
+        raise NotImplementedError(self.name)
+
+    def prefill(self, q: Array, k: Array, v: Array, cfg, n_max: int):
+        """Causal full-sequence pass that also returns the decode state:
+        ``(out [b, h, n, dv], cache)`` — the exact state token-by-token
+        decode would have reached after the prompt."""
+        raise NotImplementedError(self.name)
+
+    def decode_step(self, cache, q: Array, k: Array, v: Array, cfg, pos: Array):
+        """One autoregressive step against the state.
+
+        q ``[b, h, d]``; k/v ``[b, hk, ·]``; pos ``[b]`` int32 0-based
+        position of this token (per batch row / serving slot).  The new
+        token attends to itself.  Returns ``(out [b, h, dv], new_cache)``."""
+        raise NotImplementedError(self.name)
+
+    def merge_state(self, a, b):
+        """Merge the states of two CONSECUTIVE sequence shards (context
+        parallelism).  Only meaningful when ``supports_cp``."""
+        raise NotImplementedError(
+            f"attention backend {self.name!r} has no mergeable state "
+            "(supports_cp=False)"
+        )
+
+    def apply_cp(self, q: Array, k: Array, v: Array, cfg, mesh, axis: str,
+                 dp_axis=None) -> Array:
+        """Context-parallel full-sequence attention: sequence sharded over
+        mesh ``axis``, O(1) state exchanged.  Only when ``supports_cp``."""
+        raise NotImplementedError(
+            f"attention backend {self.name!r} does not support context "
+            "parallelism"
+        )
+
+    # -- protocol: cross-attention state (supports_cross backends) ----------
+
+    def init_cross_cache(self, cfg, batch: int, n_src: int, dtype):
+        """Zero cross-attention state for a source of ``n_src`` tokens."""
+        raise NotImplementedError(
+            f"attention backend {self.name!r} does not support cross-attention"
+        )
+
+    def cross_state(self, k: Array, v: Array, cfg):
+        """Precompute the cross-attention read state from projected source
+        k/v ``[b, hk, n_src, ·]`` (encoder output / vision tokens)."""
+        raise NotImplementedError(
+            f"attention backend {self.name!r} does not support cross-attention"
+        )
+
+    def cross_read(self, state, q: Array, cfg) -> Array:
+        """Read one decode step's cross-attention: q ``[b, h, d]`` against
+        the precomputed state.  Returns ``[b, h, dv]``."""
+        raise NotImplementedError(
+            f"attention backend {self.name!r} does not support cross-attention"
+        )

@@ -1,0 +1,39 @@
+"""Katharopoulos et al. (2020) elu+1 linear-attention backend — the
+paper's comparison point.
+
+Training/eval run the elu-feature linear attention; decode keeps the
+KV-cache + exact-softmax read of the original code (the baseline is a
+train-time quality comparison, not a serving backend — its feature-map
+read has no O(1) decode state in this repo).  Cross-attention is
+unsupported: the full-sequence and decode paths would disagree about the
+kernel, so the registry rejects cross configs outright instead of mixing
+semantics.
+"""
+
+from __future__ import annotations
+
+from repro.backends.base import AttentionBackend
+from repro.backends.softmax import _kv_decode_step, _kv_prefill_cache, SoftmaxBackend
+from repro.core import linear_attention
+
+
+class LinearEluBackend(AttentionBackend):
+    """elu(x)+1 linear attention (train/eval); KV-cache softmax decode."""
+
+    name = "linear_elu"
+    state_kind = "kv"
+    supports_cross = False
+    supports_cp = False
+    impls = ("xla",)
+
+    def init_cache(self, cfg, batch, n_max, dtype):
+        return SoftmaxBackend.init_cache(self, cfg, batch, n_max, dtype)
+
+    def apply(self, q, k, v, cfg, *, causal=True):
+        return linear_attention(q, k, v, causal=causal)
+
+    def prefill(self, q, k, v, cfg, n_max):
+        return self.apply(q, k, v, cfg, causal=True), _kv_prefill_cache(k, v, n_max)
+
+    def decode_step(self, cache, q, k, v, cfg, pos):
+        return _kv_decode_step(cache, q, k, v, pos)

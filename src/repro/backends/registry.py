@@ -1,0 +1,87 @@
+"""Attention-backend registry: the single resolution point for
+``ModelConfig.attention``.
+
+``register_backend`` is called once per backend at ``repro.backends``
+import time (and by downstream code adding custom backends);
+``get_backend`` / ``resolve_backend`` are what the dispatch sites call.
+``resolve_backend`` additionally validates the config against the
+backend's capability flags — every unsupported combination (pallas +
+sym_state, cross blocks on a causal-only impl, context parallelism on a
+KV backend, …) is rejected HERE, at trace/build time, instead of
+producing silently-wrong numerics deep inside a jit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.backends.base import AttentionBackend
+
+_REGISTRY: Dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend, *, overwrite: bool = False) -> AttentionBackend:
+    """Register a backend under ``backend.name``.
+
+    Args:
+      backend: an ``AttentionBackend`` instance with a non-empty ``name``.
+      overwrite: allow replacing an existing registration (tests /
+        experimentation); duplicate names are an error otherwise.
+
+    Returns:
+      The backend (so registration can be used as a decorator-ish call).
+    """
+    if not backend.name:
+        raise ValueError("backend must set a non-empty .name")
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"attention backend {backend.name!r} already registered "
+            "(pass overwrite=True to replace)"
+        )
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> AttentionBackend:
+    """Look up a registered backend by name.
+
+    Args:
+      name: registry key (``"softmax" | "taylor" | "linear_elu" | "ssm"``
+        for the built-ins).
+
+    Returns:
+      The registered ``AttentionBackend`` singleton.
+    """
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> Dict[str, AttentionBackend]:
+    """Snapshot of the registry: ``{name: backend}`` (insertion order)."""
+    return dict(_REGISTRY)
+
+
+def resolve_backend(cfg) -> AttentionBackend:
+    """Resolve ``cfg.attention`` to a validated backend.
+
+    Args:
+      cfg: a ``ModelConfig``.  ``cfg.attention`` picks the backend;
+        ``cfg.attn_impl`` and the capability flags are cross-checked by
+        ``backend.validate`` (see ``base.AttentionBackend``).
+
+    Returns:
+      The backend, guaranteed able to execute this config.
+    """
+    backend = get_backend(cfg.attention)
+    if backend.level != "qkv":
+        raise ValueError(
+            f"backend {backend.name!r} is {backend.level}-level and cannot "
+            "serve as ModelConfig.attention (use it as a block kind instead)"
+        )
+    backend.validate(cfg)
+    return backend

@@ -1,0 +1,93 @@
+"""Exact-softmax attention backend (dense + flash execution).
+
+The baseline the paper approximates.  One "xla" impl with an internal
+dense/flash split: short sequences use the fused dense path, long
+chunk-multiple sequences the flash-style streaming scan (same numerics,
+bounded memory).  Decode state is a fixed-capacity per-row KV cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import AttentionBackend
+from repro.backends.state import KVCache
+from repro.core import flash_softmax_attention, softmax_attention, softmax_decode_step
+
+Array = jax.Array
+
+# Sequence length above which the flash scan beats the dense path (and the
+# dense n×n score tile stops being a rounding error in HBM).
+_FLASH_MIN_SEQ = 2048
+
+
+def _kv_prefill_cache(k: Array, v: Array, n_max: int) -> KVCache:
+    """Prompt K/V written into a zeroed n_max-capacity cache (shared by the
+    softmax and linear_elu backends)."""
+    b, hk, n, hd = k.shape
+    cache_k = jnp.zeros((b, hk, n_max, hd), k.dtype).at[:, :, :n].set(k)
+    cache_v = jnp.zeros((b, hk, n_max, v.shape[-1]), v.dtype).at[:, :, :n].set(v)
+    return KVCache(k=cache_k, v=cache_v, length=jnp.full((b,), n, jnp.int32))
+
+
+def _kv_decode_step(cache: KVCache, q: Array, k: Array, v: Array, pos: Array):
+    """Scatter this token's k/v at each row's position, then read with the
+    exact softmax over the valid prefix.
+
+    Per-row scatter: each serving slot writes at its own position.  Retired
+    slots keep a frozen pos; BOTH the write index and the length are clamped
+    to capacity so a retired slot can neither write out of bounds nor claim
+    more valid entries than the cache holds (its slot is fully overwritten
+    on re-admission)."""
+    n_max = cache.k.shape[2]
+    idx = jnp.minimum(pos, n_max - 1)
+    upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_index_in_dim(c, u, i, 1))
+    new_k = upd(cache.k, k.astype(cache.k.dtype), idx)
+    new_v = upd(cache.v, v.astype(cache.v.dtype), idx)
+    cache = KVCache(k=new_k, v=new_v, length=jnp.minimum(pos + 1, n_max))
+    o = softmax_decode_step(q, cache.k, cache.v, cache.length)
+    return o, cache
+
+
+class SoftmaxBackend(AttentionBackend):
+    """Exact softmax attention: flash-style scan for long sequences, KV
+    cache decode, KV cross-attention state."""
+
+    name = "softmax"
+    state_kind = "kv"
+    supports_cross = True
+    supports_cp = False
+    impls = ("xla",)
+
+    def init_cache(self, cfg, batch, n_max, dtype):
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        z = jnp.zeros((batch, hk, n_max, hd), dtype)
+        return KVCache(k=z, v=z, length=jnp.zeros((batch,), jnp.int32))
+
+    def apply(self, q, k, v, cfg, *, causal=True):
+        n = k.shape[2]
+        if n > _FLASH_MIN_SEQ and n % cfg.attn_chunk == 0:
+            return flash_softmax_attention(
+                q, k, v, causal=causal, chunk=max(cfg.attn_chunk, 512)
+            )
+        return softmax_attention(q, k, v, causal=causal)
+
+    def prefill(self, q, k, v, cfg, n_max):
+        return self.apply(q, k, v, cfg, causal=True), _kv_prefill_cache(k, v, n_max)
+
+    def decode_step(self, cache, q, k, v, cfg, pos):
+        return _kv_decode_step(cache, q, k, v, pos)
+
+    def init_cross_cache(self, cfg, batch, n_src, dtype):
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        z = jnp.zeros((batch, hk, n_src, hd), dtype)
+        return KVCache(k=z, v=z, length=jnp.full((batch,), n_src, jnp.int32))
+
+    def cross_state(self, k, v, cfg):
+        return KVCache(
+            k=k, v=v, length=jnp.full((k.shape[0],), k.shape[2], jnp.int32)
+        )
+
+    def cross_read(self, state, q, cfg):
+        return softmax_decode_step(q, state.k, state.v, state.length)

@@ -1,0 +1,71 @@
+"""Mamba2 (SSD) as a block-level backend.
+
+SSD is linear attention with per-step decay (see ``models/ssm.py``), so
+its recurrent state belongs in the same registry as the attention states
+— ``models/blocks.py`` and ``models/lm.py`` resolve the mamba cache and
+its apply/prefill/decode through ``get_backend("ssm")`` exactly like the
+qkv backends.
+
+``level = "block"``: Mamba fuses its own projections, conv and gating,
+so the protocol methods take the BLOCK params and ``[b, n, d_model]``
+activations instead of projected q/k/v (see ``base.AttentionBackend``).
+Consequently "ssm" cannot be set as ``ModelConfig.attention`` — it is a
+block kind (``pattern=("mamba", ...)``), and ``resolve_backend`` rejects
+the mix-up.
+
+State merging across sequence shards is decay-weighted (NOT a plain sum
+like the Taylor moments), so the protocol's ``merge_state``/``apply_cp``
+do not apply and ``supports_cp`` is False at the protocol level —
+sequence parallelism for SSD exists, but it runs inside ``mamba_apply``
+(``core/ssd_context_parallel.py``), below the q/k/v protocol surface.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.backends.base import AttentionBackend
+
+Array = jax.Array
+
+
+class SSMBackend(AttentionBackend):
+    """Mamba2/SSD block backend: O(1) [b, H, P, N] recurrent state."""
+
+    name = "ssm"
+    level = "block"
+    state_kind = "ssm"
+    supports_cross = False
+    # SSD context parallelism exists but is decay-weighted and handled
+    # inside mamba_apply (core/ssd_context_parallel.py) — the protocol's
+    # apply_cp/merge_state contract does not hold, so the flag is False.
+    supports_cp = False
+    impls = ("xla",)
+
+    def init_cache(self, cfg, batch, n_max, dtype):
+        from repro.models.ssm import mamba_init_cache  # noqa: PLC0415 (cycle)
+
+        return mamba_init_cache(cfg, batch, dtype)
+
+    def apply(self, params, x, cfg, *, causal=True):
+        from repro.models import ssm  # noqa: PLC0415 (cycle)
+
+        if not causal:
+            raise NotImplementedError("SSD is a causal recurrence")
+        return ssm.mamba_apply(params, x, cfg, chunk=cfg.attn_chunk)
+
+    def prefill(self, params, x, cfg, n_max):
+        from repro.models import ssm  # noqa: PLC0415 (cycle)
+
+        return ssm.mamba_prefill(params, x, cfg)
+
+    def decode_step(self, params, x_t, cache, cfg, pos):
+        from repro.models import ssm  # noqa: PLC0415 (cycle)
+
+        return ssm.mamba_decode_step(params, x_t, cache, cfg)
+
+    def merge_state(self, a, b):
+        raise NotImplementedError(
+            "SSD states merge with decay weighting, not addition — use "
+            "core/ssd_context_parallel.py"
+        )

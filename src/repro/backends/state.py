@@ -1,0 +1,39 @@
+"""Decode-state containers shared by the attention backends.
+
+These used to live in ``repro.models.attention``; they sit below the
+backend implementations now so that ``backends/*`` can construct them
+without importing the model layer (``models/attention`` re-exports them
+for compatibility).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+
+from repro.core import TaylorState
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    """Ring-less fixed-capacity KV cache (softmax / linear_elu backends).
+
+    ``length`` is per batch row ([b] int32): in slotted serving every slot
+    decodes at its own position, so the number of valid cache entries is a
+    per-slot quantity (see repro/serve/slots.py)."""
+
+    k: Array  # [b, hk, n_max, hd]
+    v: Array  # [b, hk, n_max, hd]
+    length: Array  # [b] int32 — valid tokens written per batch row/slot
+
+
+AttnCache = Union[KVCache, TaylorState]
+
+
+class CrossCache(NamedTuple):
+    """Precomputed cross-attention source: either projected K/V (KV-kind
+    backends) or the global TaylorState (moments-kind backends)."""
+
+    kv: AttnCache

@@ -1,0 +1,187 @@
+"""The paper's order-2 Taylor linear-attention backend.
+
+Two impls, selected by ``ModelConfig.attn_impl``:
+
+  * ``"xla"``    — the chunked scan of ``core/taylor.py`` (custom-VJP
+    training path, context parallelism, every TaylorConfig variant).
+  * ``"pallas"`` — the fused TPU kernel pair of
+    ``kernels/taylor_attention`` (forward AND two-pass backward) through
+    ``taylor_attention_kernel_trainable``; runs under the Pallas
+    interpreter off-TPU.  Causal self-attention only, d ≤ 128 after
+    padding, full second moment, standard (+1) expansion — the registry
+    rejects configs outside this envelope when "pallas" is forced.
+
+``"auto"`` picks the kernel exactly when it wins: on TPU, inside the
+envelope; everywhere else the XLA scan (off-TPU the interpreter is a
+correctness tool, not an execution engine).  Prefill and decode always
+run the XLA moment-state paths — prefill needs the chunk-scan's
+``return_state`` handoff and decode is state-bound, not compute-bound.
+
+Decode/cross state is the O(1) ``TaylorState`` (running moments); states
+of consecutive sequence shards merge by addition, which is what makes the
+single-exchange context parallelism of ``core/context_parallel.py`` work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.backends.base import AttentionBackend
+from repro.core import (
+    init_taylor_state,
+    merge_states,
+    taylor_attention,
+    taylor_attention_chunked,
+    taylor_attention_noncausal,
+    taylor_decode_step,
+    taylor_prefill_state,
+    taylor_state_read,
+)
+from repro.kernels.taylor_attention.ops import taylor_attention_kernel_trainable
+
+Array = jax.Array
+
+# The Pallas kernels' envelope: head dim ≤ 128 lanes after padding (the
+# second-moment VMEM budget — see kernels/taylor_attention/kernel.py).
+_PALLAS_MAX_HEAD_DIM = 128
+
+
+def _pallas_fits(cfg) -> bool:
+    """One envelope for both "auto" selection and forced-"pallas"
+    validation — the two must never disagree about a config."""
+    t = cfg.taylor
+    return (
+        not t.minus_one
+        and not t.sym_state
+        and cfg.resolved_head_dim <= _PALLAS_MAX_HEAD_DIM
+        and cfg.attn_sharding != "cp"
+        and not AttentionBackend._uses_cross(cfg)
+    )
+
+
+class TaylorBackend(AttentionBackend):
+    """Order-1/2 Taylor linear attention (XLA chunked scan + Pallas kernels)."""
+
+    name = "taylor"
+    state_kind = "moments"
+    supports_cross = True
+    supports_cp = True
+    impls = ("xla", "pallas")
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if cfg.attn_impl != "pallas":
+            return
+        t = cfg.taylor
+        if t.minus_one:
+            raise ValueError(
+                "attn_impl='pallas': the Pallas kernels hardcode the "
+                "standard (+1) expansion; the minus_one variant needs "
+                "attn_impl='xla'"
+            )
+        if t.sym_state:
+            raise ValueError(
+                "attn_impl='pallas': the Pallas kernels use the full "
+                "second moment; sym_state is an XLA/decode-memory "
+                "optimisation — use attn_impl='xla' (or 'auto')"
+            )
+        if cfg.resolved_head_dim > _PALLAS_MAX_HEAD_DIM:
+            raise ValueError(
+                f"attn_impl='pallas': head_dim {cfg.resolved_head_dim} > "
+                f"{_PALLAS_MAX_HEAD_DIM} exceeds the kernel's VMEM envelope "
+                "(use attn_impl='xla'; see DESIGN.md §VMEM constraint)"
+            )
+        if cfg.attn_sharding == "cp":
+            raise ValueError(
+                "attn_impl='pallas': context parallelism runs the XLA "
+                "chunked scan (the kernel has no state handoff); use "
+                "attn_impl='auto' or 'xla' with attn_sharding='cp'"
+            )
+        if self._uses_cross(cfg):
+            raise ValueError(
+                "attn_impl='pallas': the kernel is causal-self-attention "
+                "only, but the model has cross blocks — use "
+                "attn_impl='auto' or 'xla'"
+            )
+
+    def resolve_impl(self, cfg) -> str:
+        if cfg.attn_impl != "auto":
+            return cfg.attn_impl
+        if jax.default_backend() == "tpu" and _pallas_fits(cfg):
+            return "pallas"
+        return "xla"
+
+    # -- protocol ------------------------------------------------------------
+
+    def init_cache(self, cfg, batch, n_max, dtype):
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return init_taylor_state(batch, hk, hd, hd, cfg.taylor)
+
+    def apply(self, q, k, v, cfg, *, causal=True):
+        if not causal:
+            return taylor_attention_noncausal(q, k, v, cfg.taylor)
+        if self.resolve_impl(cfg) == "pallas":
+            return taylor_attention_kernel_trainable(
+                q, k, v, cfg.taylor, chunk=cfg.attn_chunk,
+                interpret=jax.default_backend() != "tpu", backward="auto",
+            )
+        if cfg.attn_sharding == "cp":
+            o = self._maybe_cp(q, k, v, cfg)
+            if o is not None:
+                return o
+        return taylor_attention(q, k, v, cfg.taylor, causal=True, chunk=cfg.attn_chunk)
+
+    def prefill(self, q, k, v, cfg, n_max):
+        n = q.shape[2]
+        if n % cfg.attn_chunk == 0 and n > cfg.attn_chunk:
+            return taylor_attention_chunked(
+                q, k, v, cfg.taylor, chunk=cfg.attn_chunk, return_state=True
+            )
+        o = taylor_attention(q, k, v, cfg.taylor, causal=True)
+        return o, taylor_prefill_state(k, v, cfg.taylor)
+
+    def decode_step(self, cache, q, k, v, cfg, pos):
+        o, cache = taylor_decode_step(cache, q, k, v, cfg.taylor)
+        return o, cache
+
+    def merge_state(self, a, b):
+        return merge_states(a, b)
+
+    def apply_cp(self, q, k, v, cfg, mesh, axis, dp_axis=None):
+        from repro.core.context_parallel import (  # noqa: PLC0415 (cycle)
+            taylor_attention_context_parallel,
+        )
+
+        return taylor_attention_context_parallel(
+            q, k, v, cfg.taylor, mesh, axis, chunk=cfg.attn_chunk,
+            dp_axis=dp_axis,
+        )
+
+    def _maybe_cp(self, q, k, v, cfg):
+        """Context parallelism when a sharding context is active and the
+        sequence divides (shards × chunk); None → caller falls back."""
+        from repro.distributed import api as dist  # noqa: PLC0415 (cycle)
+
+        ctx = dist.active()
+        if ctx is None:
+            return None
+        mesh, rules = ctx
+        seq_ax = rules.get("sp") or rules.get("tp")
+        n = q.shape[2]
+        if seq_ax is None or n % (
+            dist.mesh_axis_size(mesh, seq_ax) * cfg.attn_chunk
+        ) != 0:
+            return None
+        return self.apply_cp(q, k, v, cfg, mesh, seq_ax, dp_axis=rules.get("dp"))
+
+    # -- cross-attention -----------------------------------------------------
+
+    def init_cross_cache(self, cfg, batch, n_src, dtype):
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return init_taylor_state(batch, hk, hd, hd, cfg.taylor)
+
+    def cross_state(self, k, v, cfg):
+        return taylor_prefill_state(k, v, cfg.taylor)
+
+    def cross_read(self, state, q, cfg):
+        return taylor_state_read(state, q, cfg.taylor)

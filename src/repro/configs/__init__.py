@@ -80,7 +80,7 @@ def applicable_shapes(cfg: ModelConfig) -> tuple:
     """Which assigned shapes are well-defined for this config (see DESIGN.md
     §Shape/skip notes)."""
     out = ["train_4k", "prefill_32k", "decode_32k"]
-    if cfg.is_attention_free or cfg.attention == "taylor":
+    if cfg.supports_long_context:
         out.append("long_500k")
     return tuple(out)
 

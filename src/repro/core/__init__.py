@@ -25,6 +25,8 @@ from repro.core.taylor import (
     taylor_attention_parallel,
     taylor_attention_recurrent,
     taylor_decode_step,
+    taylor_prefill_state,
+    taylor_state_read,
 )
 
 __all__ = [
@@ -48,4 +50,6 @@ __all__ = [
     "taylor_attention_recurrent",
     "taylor_decode_step",
     "taylor_features",
+    "taylor_prefill_state",
+    "taylor_state_read",
 ]

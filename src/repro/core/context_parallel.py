@@ -40,6 +40,34 @@ from repro.distributed import api as dist
 Array = jax.Array
 
 
+def attention_context_parallel(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg,
+    mesh: Mesh,
+    axis: str,
+    dp_axis=None,
+) -> Array:
+    """Registry-dispatched context-parallel attention.
+
+    Resolves ``cfg.attention`` (cfg: ``ModelConfig``) through the backend
+    registry, enforces the ``supports_cp`` capability flag and delegates to
+    the backend's ``apply_cp`` — the one entry point for sequence-sharded
+    attention, whatever the backend.  (The taylor implementation below is
+    what the built-in backend delegates back to.)
+    """
+    from repro.backends.registry import resolve_backend  # noqa: PLC0415 (cycle)
+
+    backend = resolve_backend(cfg)
+    if not backend.supports_cp:
+        raise ValueError(
+            f"attention backend {backend.name!r} does not support context "
+            "parallelism (supports_cp=False)"
+        )
+    return backend.apply_cp(q, k, v, cfg, mesh, axis, dp_axis=dp_axis)
+
+
 def taylor_attention_context_parallel(
     q: Array,
     k: Array,

@@ -444,6 +444,64 @@ def taylor_attention_recurrent(
 
 
 # ---------------------------------------------------------------------------
+# Public state helpers: build / read a moment state without the scan.
+# (The backend layer and cross-attention use these — no private imports.)
+# ---------------------------------------------------------------------------
+
+
+def taylor_prefill_state(
+    k: Array, v: Array, cfg: TaylorConfig, state: Optional[TaylorState] = None
+) -> TaylorState:
+    """Moment state of a key/value sequence in one shot (no output pass).
+
+    The state every query AFTER the sequence reads: used for short-prompt
+    prefill→decode handoff (where the chunked scan's ``return_state`` does
+    not apply) and for cross-attention sources (encoder output / vision
+    tokens), whose state is global and query-independent.
+
+    Args:
+      k: keys ``[b, hk, n, d]`` (normalised internally per
+        ``cfg.normalize_qk`` — pass RAW projections).
+      v: values ``[b, hk, n, d_v]``.
+      cfg: TaylorConfig.
+      state: optional state to accumulate onto (defaults to zeros).
+
+    Returns:
+      ``TaylorState`` with the whole sequence absorbed.
+    """
+    _, kn = _norm_qk(k, k, cfg)
+    if state is None:
+        state = init_taylor_state(
+            k.shape[0], k.shape[1], k.shape[-1], v.shape[-1], cfg
+        )
+    return _state_update(state, kn, v, cfg)
+
+
+def taylor_state_read(state: TaylorState, q_t: Array, cfg: TaylorConfig) -> Array:
+    """Read one token's attention output from a FIXED moment state.
+
+    The read half of ``taylor_decode_step`` (no state update) — the
+    cross-attention decode path, where the source state never changes.
+
+    Args:
+      state: the moment state (per batch row and kv head).
+      q_t: queries ``[b, h, d]`` (normalised internally per
+        ``cfg.normalize_qk``).
+      cfg: TaylorConfig.
+
+    Returns:
+      Attention output ``[b, h, d_v]`` (f32).
+    """
+    b, h, d = q_t.shape
+    hk = state.z1.shape[1]
+    if cfg.normalize_qk:
+        q_t = layernorm_no_affine(q_t).astype(q_t.dtype)
+    qg = q_t.reshape(b, hk, h // hk, 1, d)
+    num, den = _chunk_inter(qg, state, cfg, cfg.scale(d))
+    return _safe_div(num, den)[:, :, :, 0, :].reshape(b, h, -1)
+
+
+# ---------------------------------------------------------------------------
 # Context parallelism helper: merge per-shard states (moments are sums).
 # ---------------------------------------------------------------------------
 

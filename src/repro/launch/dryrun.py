@@ -114,8 +114,10 @@ def lower_cell(arch: str, shape: str, mesh, backend=None, donate=True, save_hlo=
         import dataclasses as _dc
 
         cfg = cfg.replace(taylor=_dc.replace(cfg.taylor, sym_state=True))
-    if shape == "long_500k" and not (cfg.is_attention_free or cfg.attention == "taylor"):
-        raise ValueError("long_500k requires sub-quadratic attention (taylor/ssm)")
+    if shape == "long_500k" and not cfg.supports_long_context:
+        raise ValueError(
+            "long_500k requires O(1)-state decode (registry state_kind != 'kv')"
+        )
     n_params = count_params(cfg)
     n_active = count_active_params(cfg)
     spec = SHAPES[shape]

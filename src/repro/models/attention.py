@@ -1,55 +1,51 @@
-"""GQA attention block with selectable backend (the paper's taylor attention
-as a first-class choice), plus prefill/decode cache management.
+"""GQA attention block over the unified backend registry, plus
+prefill/decode cache management.
 
-Backends ("softmax" | "taylor" | "linear_elu"):
+``cfg.attention`` resolves to an ``AttentionBackend`` (repro.backends):
+this module owns the projections (wq/wk/wv/wo, RoPE, sharding
+constraints) and hands projected heads to the backend protocol —
+``apply`` / ``prefill`` / ``decode_step`` / ``cross_state`` /
+``cross_read``.  Built-in backends:
+
   * softmax    — exact; flash-style scan for long sequences; KV cache decode.
-  * taylor     — the paper's order-2 Taylor linear attention; chunked scan
-                 for training/prefill, O(1) TaylorState for decode.
+  * taylor     — the paper's order-2 Taylor linear attention; XLA chunked
+                 scan or the Pallas kernel pair (``cfg.attn_impl``),
+                 O(1) TaylorState for decode.
   * linear_elu — Katharopoulos elu+1 baseline (paper's comparison point).
+
+The public functions here are the stable model-layer API (kept as thin
+wrappers so every call site and test of the pre-registry code keeps
+working); backend selection lives exclusively in the registry.
 
 Shapes follow [b, n, d] activations; heads are [b, h, n, hd] internally.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    TaylorConfig,
-    TaylorState,
-    flash_softmax_attention,
-    init_taylor_state,
-    linear_attention,
-    softmax_attention,
-    softmax_decode_step,
-    taylor_attention,
-    taylor_attention_chunked,
-    taylor_attention_noncausal,
-    taylor_decode_step,
-)
+from repro.backends import AttnCache, CrossCache, KVCache, resolve_backend
 from repro.distributed.api import constrain
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init
 
 Array = jax.Array
 
-
-class KVCache(NamedTuple):
-    """Ring-less fixed-capacity KV cache (softmax backend).
-
-    ``length`` is per batch row ([b] int32): in slotted serving every slot
-    decodes at its own position, so the number of valid cache entries is a
-    per-slot quantity (see repro/serve/slots.py)."""
-
-    k: Array  # [b, hk, n_max, hd]
-    v: Array  # [b, hk, n_max, hd]
-    length: Array  # [b] int32 — valid tokens written per batch row/slot
-
-
-AttnCache = Union[KVCache, TaylorState]
+__all__ = [
+    "AttnCache",
+    "CrossCache",
+    "KVCache",
+    "attention_apply",
+    "attention_decode",
+    "attention_init",
+    "attention_prefill",
+    "cross_decode",
+    "cross_prefill",
+    "init_cache",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -115,52 +111,18 @@ def attention_apply(
     """Self-attention (kv_src=None) or cross-attention (kv_src=[b,m,d])."""
     if positions is None:
         positions = jnp.arange(x.shape[1])
+    backend = resolve_backend(cfg)
     cross = kv_src is not None
+    if cross and not backend.supports_cross:
+        raise ValueError(
+            f"attention backend {backend.name!r} does not support "
+            "cross-attention (supports_cross=False)"
+        )
     q = _project_q(params, x, cfg, None if cross else positions)
     src = kv_src if cross else x
     kv_pos = None if cross else positions
     k, v = _project_kv(params, src, cfg, kv_pos)
-
-    backend = cfg.attention
-    if backend == "taylor":
-        if causal and not cross:
-            o = None
-            if cfg.attn_sharding == "cp":
-                from repro.core.context_parallel import (  # noqa: PLC0415
-                    taylor_attention_context_parallel,
-                )
-                from repro.distributed import api as dist  # noqa: PLC0415
-
-                ctx = dist.active()
-                if ctx is not None:
-                    mesh, rules = ctx
-                    seq_ax = rules.get("sp") or rules.get("tp")
-                    n = q.shape[2]
-                    if seq_ax is not None and n % (
-                        dist.mesh_axis_size(mesh, seq_ax) * cfg.attn_chunk
-                    ) == 0:
-                        o = taylor_attention_context_parallel(
-                            q, k, v, cfg.taylor, mesh, seq_ax,
-                            chunk=cfg.attn_chunk, dp_axis=rules.get("dp"),
-                        )
-            if o is None:
-                o = taylor_attention(
-                    q, k, v, cfg.taylor, causal=True, chunk=cfg.attn_chunk
-                )
-        else:
-            o = taylor_attention_noncausal(q, k, v, cfg.taylor)
-    elif backend == "linear_elu":
-        o = linear_attention(q, k, v, causal=causal and not cross)
-    elif backend == "softmax":
-        n = k.shape[2]
-        if n > 2048 and n % cfg.attn_chunk == 0:
-            o = flash_softmax_attention(
-                q, k, v, causal=causal and not cross, chunk=max(cfg.attn_chunk, 512)
-            )
-        else:
-            o = softmax_attention(q, k, v, causal=causal and not cross)
-    else:
-        raise ValueError(f"unknown attention backend {backend!r}")
+    o = backend.apply(q, k, v, cfg, causal=causal and not cross)
     return _out_proj(params, o, x.dtype)
 
 
@@ -173,21 +135,18 @@ def init_cache(cfg: ModelConfig, batch: int, n_max: int, dtype=jnp.bfloat16) -> 
     """Zero decode cache for one attention block.
 
     Args:
-      cfg: model config (``cfg.attention`` picks the cache kind).
+      cfg: model config (``cfg.attention`` picks the cache kind via the
+        backend registry's ``state_kind``).
       batch: number of batch rows / serving slots.
-      n_max: KV capacity in tokens (ignored by the taylor backend, whose
-        moment state is O(1) in context length).
+      n_max: KV capacity in tokens (ignored by O(1)-state backends, whose
+        moment state is constant in context length).
       dtype: KV-cache dtype (the taylor moments are always f32).
 
     Returns:
       ``TaylorState`` (taylor) or ``KVCache`` (softmax / linear_elu) with
       per-row ``length`` zeros.
     """
-    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    if cfg.attention == "taylor":
-        return init_taylor_state(batch, hk, hd, hd, cfg.taylor)
-    z = jnp.zeros((batch, hk, n_max, hd), dtype)
-    return KVCache(k=z, v=z, length=jnp.zeros((batch,), jnp.int32))
+    return resolve_backend(cfg).init_cache(cfg, batch, n_max, dtype)
 
 
 def attention_prefill(
@@ -198,38 +157,14 @@ def attention_prefill(
     positions: Optional[Array] = None,
 ) -> Tuple[Array, AttnCache]:
     """Causal self-attention over the prompt, returning (y, cache)."""
-    b, n, _ = x.shape
+    n = x.shape[1]
     if positions is None:
         positions = jnp.arange(n)
+    backend = resolve_backend(cfg)
     q = _project_q(params, x, cfg, positions)
     k, v = _project_kv(params, x, cfg, positions)
-
-    if cfg.attention == "taylor":
-        if n % cfg.attn_chunk == 0 and n > cfg.attn_chunk:
-            o, state = taylor_attention_chunked(
-                q, k, v, cfg.taylor, chunk=cfg.attn_chunk, return_state=True
-            )
-        else:
-            from repro.core.taylor import _norm_qk, _state_update  # noqa: PLC0415
-
-            o = taylor_attention(q, k, v, cfg.taylor, causal=True)
-            qn, kn = _norm_qk(q, k, cfg.taylor)
-            state = init_taylor_state(b, k.shape[1], q.shape[-1], v.shape[-1], cfg.taylor)
-            state = _state_update(state, kn, v, cfg.taylor)
-        return _out_proj(params, o, x.dtype), state
-
-    # softmax / linear_elu: KV cache
-    if cfg.attention == "linear_elu":
-        o = linear_attention(q, k, v, causal=True)
-    elif n > 2048 and n % cfg.attn_chunk == 0:
-        o = flash_softmax_attention(q, k, v, causal=True, chunk=max(cfg.attn_chunk, 512))
-    else:
-        o = softmax_attention(q, k, v, causal=True)
-    o = _out_proj(params, o, x.dtype)
-    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    cache_k = jnp.zeros((b, hk, n_max, hd), k.dtype).at[:, :, :n].set(k)
-    cache_v = jnp.zeros((b, hk, n_max, hd), v.dtype).at[:, :, :n].set(v)
-    return o, KVCache(k=cache_k, v=cache_v, length=jnp.full((b,), n, jnp.int32))
+    o, cache = backend.prefill(q, k, v, cfg, n_max)
+    return _out_proj(params, o, x.dtype), cache
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +196,7 @@ def attention_decode(
     """
     b, d = x_t.shape
     dtype = x_t.dtype
+    backend = resolve_backend(cfg)
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q = jnp.einsum("bd,dhk->bhk", x_t, params["wq"]["w"].astype(dtype))
     k = jnp.einsum("bd,dhk->bhk", x_t, params["wk"]["w"].astype(dtype))
@@ -274,21 +210,7 @@ def attention_decode(
         q = apply_rope(q[:, :, None, :], pos_b[:, None, None], cfg.rope_theta)[:, :, 0, :]
         k = apply_rope(k[:, :, None, :], pos_b[:, None, None], cfg.rope_theta)[:, :, 0, :]
 
-    if cfg.attention == "taylor":
-        o, cache = taylor_decode_step(cache, q, k, v, cfg.taylor)
-    else:
-        # Per-row scatter: each slot writes its k/v at its own position.
-        # Retired slots keep a frozen pos; clamp so they can never write
-        # out of bounds (their slot is fully overwritten on re-admission).
-        idx = jnp.minimum(pos_b, cache.k.shape[2] - 1)
-        upd = jax.vmap(
-            lambda c, u, i: jax.lax.dynamic_update_index_in_dim(c, u, i, 1)
-        )
-        new_k = upd(cache.k, k.astype(cache.k.dtype), idx)
-        new_v = upd(cache.v, v.astype(cache.v.dtype), idx)
-        cache = KVCache(k=new_k, v=new_v, length=pos_b + 1)
-        o = softmax_decode_step(q, cache.k, cache.v, cache.length)
-
+    o, cache = backend.decode_step(cache, q, k, v, cfg, pos_b)
     y = jnp.einsum("bhk,hkd->bd", o.astype(dtype), params["wo"]["w"].astype(dtype))
     return y, cache
 
@@ -298,46 +220,19 @@ def attention_decode(
 # ---------------------------------------------------------------------------
 
 
-class CrossCache(NamedTuple):
-    """Precomputed cross-attention source: either projected K/V (softmax) or
-    the global TaylorState (taylor backend)."""
-
-    kv: AttnCache
-
-
 def cross_prefill(params, kv_src: Array, cfg: ModelConfig) -> CrossCache:
+    """Precompute the cross-attention read state for a source sequence."""
+    backend = resolve_backend(cfg)
     k, v = _project_kv(params, kv_src, cfg, None)
-    if cfg.attention == "taylor":
-        from repro.core.taylor import _norm_qk, _state_update  # noqa: PLC0415
-
-        _, kn = _norm_qk(k, k, cfg.taylor)
-        state = init_taylor_state(
-            k.shape[0], k.shape[1], k.shape[-1], v.shape[-1], cfg.taylor
-        )
-        return CrossCache(kv=_state_update(state, kn, v, cfg.taylor))
-    return CrossCache(
-        kv=KVCache(k=k, v=v, length=jnp.full((k.shape[0],), k.shape[2], jnp.int32))
-    )
+    return CrossCache(kv=backend.cross_state(k, v, cfg))
 
 
 def cross_decode(params, x_t: Array, cache: CrossCache, cfg: ModelConfig) -> Array:
-    b, d = x_t.shape
+    """One decode step of cross-attention against the precomputed state."""
     dtype = x_t.dtype
+    backend = resolve_backend(cfg)
     q = jnp.einsum("bd,dhk->bhk", x_t, params["wq"]["w"].astype(dtype))
     if "b" in params["wq"]:
         q = q + params["wq"]["b"].astype(dtype)
-    if cfg.attention == "taylor":
-        from repro.core.feature_map import layernorm_no_affine  # noqa: PLC0415
-        from repro.core.taylor import _chunk_inter, _safe_div  # noqa: PLC0415
-
-        state: TaylorState = cache.kv
-        hk = state.z1.shape[1]
-        if cfg.taylor.normalize_qk:
-            q = layernorm_no_affine(q).astype(q.dtype)
-        qg = q.reshape(b, hk, q.shape[1] // hk, 1, q.shape[-1])
-        num, den = _chunk_inter(qg, state, cfg.taylor, cfg.taylor.scale(q.shape[-1]))
-        o = _safe_div(num, den)[:, :, :, 0, :].reshape(b, q.shape[1], -1)
-    else:
-        kv: KVCache = cache.kv
-        o = softmax_decode_step(q, kv.k, kv.v, kv.length)
+    o = backend.cross_read(cache.kv, q, cfg)
     return jnp.einsum("bhk,hkd->bd", o.astype(dtype), params["wo"]["w"].astype(dtype))

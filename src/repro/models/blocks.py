@@ -1,6 +1,10 @@
 """Block-kind dispatcher: init / full-sequence apply / prefill / decode for
 every kind in ModelConfig.pattern ("attn", "moe", "mamba", "shared_attn",
 "cross").  models/lm.py scans these over the depth dimension.
+
+Attention sub-ops go through ``models/attention.py`` (which resolves the
+qkv-level backend from the registry); the mamba kind resolves the
+block-level "ssm" backend from the same registry.
 """
 
 from __future__ import annotations
@@ -10,6 +14,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backends import get_backend
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
@@ -81,7 +86,7 @@ def block_apply(
         return x, aux
     if kind == "mamba":
         h = norm_apply(params["norm1"], x, cfg.norm, eps)
-        x = x + ssm.mamba_apply(params["mamba"], h, cfg, chunk=cfg.attn_chunk)
+        x = x + get_backend("ssm").apply(params["mamba"], h, cfg)
         return x, aux
     raise ValueError(kind)
 
@@ -107,10 +112,8 @@ def block_prefill(
     """
     eps = cfg.norm_eps
     if kind == "mamba":
-        # recompute-free streaming state: run the full apply then rebuild the
-        # final state from a chunked pass with return_state.
         h = norm_apply(params["norm1"], x, cfg.norm, eps)
-        y, cache = _mamba_prefill(params["mamba"], h, cfg)
+        y, cache = get_backend("ssm").prefill(params["mamba"], h, cfg, n_max)
         return x + y, cache
     h = norm_apply(params["norm1"], x, cfg.norm, eps)
     y, cache = attn.attention_prefill(params["attn"], h, cfg, n_max, positions)
@@ -135,33 +138,6 @@ def _cross_apply_full(params, h: Array, kv_src: Array, cfg: ModelConfig) -> Arra
     return attn.attention_apply(params, h, cfg, None, causal=False, kv_src=kv_src)
 
 
-def _mamba_prefill(params, h: Array, cfg: ModelConfig):
-    """Like ssm.mamba_apply but returns the streaming cache."""
-    s = cfg.ssm
-    d = cfg.d_model
-    di = s.d_inner(d)
-    nh = s.n_ssm_heads(d)
-    gN = s.n_groups * s.d_state
-    b, n, _ = h.shape
-    dtype = h.dtype
-    zxbcdt = jnp.einsum("bnd,dk->bnk", h, params["in_proj"]["w"].astype(dtype))
-    z, xbc, dt = ssm._split_proj(s, d, zxbcdt)
-    conv_tail = xbc[:, -(s.conv_width - 1) :, :] if s.conv_width > 1 else xbc[:, :0, :]
-    xbc, _ = ssm._causal_conv(xbc, params["conv_w"], params["conv_b"])
-    xs = xbc[..., :di].reshape(b, n, nh, s.head_dim)
-    B = xbc[..., di : di + gN].reshape(b, n, s.n_groups, s.d_state)
-    C = xbc[..., di + gN :].reshape(b, n, s.n_groups, s.d_state)
-    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
-    A = -jnp.exp(params["A_log"])
-    chunk = cfg.attn_chunk if n % cfg.attn_chunk == 0 else n
-    y, h_state = ssm._ssd_chunked(xs, dtf, A, B, C, chunk, return_state=True)
-    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
-    y = y.reshape(b, n, di).astype(dtype)
-    y = norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
-    y = jnp.einsum("bnk,kd->bnd", y, params["out_proj"]["w"].astype(dtype))
-    return y, ssm.MambaCache(conv=conv_tail, ssd=h_state)
-
-
 def block_decode(
     params,
     kind: str,
@@ -174,7 +150,7 @@ def block_decode(
     eps = cfg.norm_eps
     if kind == "mamba":
         h = norm_apply(params["norm1"], x_t[:, None, :], cfg.norm, eps)[:, 0, :]
-        y, cache = ssm.mamba_decode_step(params["mamba"], h, cache, cfg)
+        y, cache = get_backend("ssm").decode_step(params["mamba"], h, cache, cfg, pos)
         return x_t + y, cache
     if kind == "cross":
         acache, ccache = cache

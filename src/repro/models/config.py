@@ -77,9 +77,17 @@ class ModelConfig:
     logit_softcap: float = 0.0
 
     # --- attention backend (the paper's technique is a first-class choice) ---
+    # Resolved through the backend registry (repro.backends): the name must
+    # be a registered qkv-level backend.
     attention: str = "softmax"     # "softmax" | "taylor" | "linear_elu"
     taylor: TaylorConfig = TaylorConfig()
     attn_chunk: int = 128          # chunk for taylor/flash scan paths
+    # Execution engine within the backend (DESIGN.md §Backend registry):
+    #   "auto"   — Pallas kernels on TPU when the envelope fits, else XLA
+    #   "xla"    — force the XLA scan paths (reference oracle)
+    #   "pallas" — force the Pallas kernel pair (interpret mode off-TPU);
+    #              the registry rejects configs outside the kernel envelope
+    attn_impl: str = "auto"
     # "tp": shard heads over the model axis (megatron-style).
     # "cp": context parallelism — shard the SEQUENCE over the model axis and
     #       exchange only the O(d²·d_v) moment state (taylor backend only;
@@ -108,6 +116,10 @@ class ModelConfig:
         for kind in self.pattern + self.tail + self.encoder_pattern:
             if kind not in BLOCK_KINDS:
                 raise ValueError(f"unknown block kind {kind!r}")
+        if self.attn_impl not in ("auto", "xla", "pallas"):
+            raise ValueError(
+                f"attn_impl must be auto|xla|pallas, got {self.attn_impl!r}"
+            )
 
     @property
     def resolved_head_dim(self) -> int:
@@ -128,11 +140,13 @@ class ModelConfig:
 
     @property
     def supports_long_context(self) -> bool:
-        """True if decode cost/state is O(1) in context length: SSM blocks
-        and/or the paper's taylor attention."""
-        return self.is_attention_free or self.attention == "taylor" or (
-            "mamba" in self.pattern and self.attention == "taylor"
-        )
+        """True if decode cost/state is O(1) in context length — i.e. no
+        block keeps an O(n) KV cache (registry ``state_kind`` != "kv")."""
+        if self.is_attention_free:
+            return True
+        from repro.backends.registry import get_backend  # noqa: PLC0415 (cycle)
+
+        return get_backend(self.attention).state_kind != "kv"
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

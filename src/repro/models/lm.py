@@ -350,28 +350,21 @@ def lm_init_caches(
     cfg: ModelConfig, batch: int, n_max: int, dtype=jnp.bfloat16
 ):
     """Zero-initialised decode caches with the exact pytree structure that
-    lm_prefill produces (group caches stacked over n_groups)."""
-    from repro.models.attention import CrossCache, init_cache  # noqa: PLC0415
-    from repro.models.ssm import mamba_init_cache  # noqa: PLC0415
-    from repro.core import init_taylor_state  # noqa: PLC0415
-    from repro.models.attention import KVCache  # noqa: PLC0415
+    lm_prefill produces (group caches stacked over n_groups).  Cache kinds
+    resolve through the backend registry (``state_kind`` decides KV vs
+    moment vs SSM leaves)."""
+    from repro.backends import CrossCache, get_backend, resolve_backend  # noqa: PLC0415
 
-    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    backend = resolve_backend(cfg)
 
     def one(kind):
         if kind == "mamba":
-            return mamba_init_cache(cfg, batch, dtype)
-        self_cache = init_cache(cfg, batch, n_max, dtype)
+            return get_backend("ssm").init_cache(cfg, batch, n_max, dtype)
+        self_cache = backend.init_cache(cfg, batch, n_max, dtype)
         if kind != "cross":
             return self_cache
         n_src = cfg.n_image_tokens if cfg.family == "vlm" else cfg.n_audio_ctx
-        if cfg.attention == "taylor":
-            cc = CrossCache(kv=init_taylor_state(batch, hk, hd, hd, cfg.taylor))
-        else:
-            z = jnp.zeros((batch, hk, n_src, hd), dtype)
-            cc = CrossCache(
-                kv=KVCache(k=z, v=z, length=jnp.full((batch,), n_src, jnp.int32))
-            )
+        cc = CrossCache(kv=backend.init_cross_cache(cfg, batch, n_src, dtype))
         return (self_cache, cc)
 
     def stack(tree, rl):

@@ -225,6 +225,39 @@ def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaCa
     )
 
 
+def mamba_prefill(params, h: Array, cfg: ModelConfig) -> Tuple[Array, MambaCache]:
+    """Full-sequence SSD pass that also returns the streaming decode cache.
+
+    Like ``mamba_apply`` but threads ``return_state`` through the chunked
+    scan and keeps the conv tail — the prefill half of the backend
+    protocol (``repro.backends.ssm``).  h: [b, n, d_model] (pre-normed
+    block input).  Returns ``(y [b, n, d_model], MambaCache)``.
+    """
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_ssm_heads(d)
+    gN = s.n_groups * s.d_state
+    b, n, _ = h.shape
+    dtype = h.dtype
+    zxbcdt = jnp.einsum("bnd,dk->bnk", h, params["in_proj"]["w"].astype(dtype))
+    z, xbc, dt = _split_proj(s, d, zxbcdt)
+    conv_tail = xbc[:, -(s.conv_width - 1) :, :] if s.conv_width > 1 else xbc[:, :0, :]
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, n, nh, s.head_dim)
+    B = xbc[..., di : di + gN].reshape(b, n, s.n_groups, s.d_state)
+    C = xbc[..., di + gN :].reshape(b, n, s.n_groups, s.d_state)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = cfg.attn_chunk if n % cfg.attn_chunk == 0 else n
+    y, h_state = _ssd_chunked(xs, dtf, A, B, C, chunk, return_state=True)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, n, di).astype(dtype)
+    y = norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    y = jnp.einsum("bnk,kd->bnd", y, params["out_proj"]["w"].astype(dtype))
+    return y, MambaCache(conv=conv_tail, ssd=h_state)
+
+
 def mamba_decode_step(
     params, x_t: Array, cache: MambaCache, cfg: ModelConfig
 ) -> Tuple[Array, MambaCache]:

@@ -27,6 +27,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.backends import get_backend, resolve_backend
 from repro.models.config import ModelConfig
 from repro.models.lm import lm_init_caches
 
@@ -55,7 +56,34 @@ def init_slot_caches(
       batch rows — structurally identical to ``lm_prefill``'s cache output
       at ``batch = max_slots``.
     """
+    # Fail fast at engine construction: an unservable backend/impl combo
+    # (e.g. a forced Pallas impl outside its envelope) is a config error,
+    # not something to discover mid-decode inside a jit.
+    resolve_backend(cfg)
     return lm_init_caches(cfg, max_slots, n_max, dtype)
+
+
+def slot_state_kinds(cfg: ModelConfig) -> Dict[str, str]:
+    """Per-block-kind decode-state kinds of this config's cache pytree.
+
+    Resolved through the backend registry (``state_kind`` capability
+    flag): "kv" leaves are O(n_max) per slot, "moments"/"ssm" leaves are
+    O(1) in context length — the serving-economics split DESIGN.md
+    §Serving budgets against.
+
+    Args:
+      cfg: model config.
+
+    Returns:
+      ``{block_kind: state_kind}`` for every kind in the model's pattern
+      (+ tail), e.g. ``{"attn": "moments", "mamba": "ssm"}``.
+    """
+    backend = resolve_backend(cfg)
+    ssm_kind = get_backend("ssm").state_kind
+    out = {}
+    for kind in dict.fromkeys(cfg.pattern + cfg.tail):
+        out[kind] = ssm_kind if kind == "mamba" else backend.state_kind
+    return out
 
 
 def _splice(full: Array, one: Array, slot: Array, axis: int) -> Array:

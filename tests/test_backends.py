@@ -1,0 +1,284 @@
+"""Unified attention-backend registry: resolution, capability-flag
+rejection paths, and model-level Pallas-vs-XLA impl parity.
+
+The parity tests are the acceptance gate for the kernels driving the
+model path: ``attn_impl="pallas"`` must produce the same logits AND
+parameter gradients as the XLA reference through ``models/lm.py``
+(kernels run under the Pallas interpreter on CPU).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import (
+    AttentionBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from repro.configs import get_reduced
+from repro.core.feature_map import TaylorConfig
+from repro.models import lm_apply, lm_init
+from repro.models.config import ModelConfig
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    cfg = ModelConfig(
+        name="tiny", family="lm", d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, pattern=("attn",), n_groups=2,
+        attention="taylor", attn_chunk=16, dtype="float32",
+        param_dtype="float32", remat="none", tie_embeddings=True,
+    )
+    return cfg.replace(**kw) if kw else cfg
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered_with_expected_flags():
+    reg = available_backends()
+    assert set(reg) >= {"softmax", "taylor", "linear_elu", "ssm"}
+    assert reg["softmax"].state_kind == "kv"
+    assert reg["taylor"].state_kind == "moments"
+    assert reg["taylor"].supports_cp and "pallas" in reg["taylor"].impls
+    assert reg["ssm"].level == "block" and reg["ssm"].state_kind == "ssm"
+    assert not reg["linear_elu"].supports_cross
+
+
+def test_register_backend_rejects_duplicates_and_anonymous():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(type(get_backend("softmax"))())
+    with pytest.raises(ValueError, match="non-empty"):
+        register_backend(AttentionBackend())
+    # overwrite=True is the sanctioned replacement path
+    register_backend(get_backend("softmax"), overwrite=True)
+
+
+def test_get_backend_unknown_name():
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        get_backend("winograd")
+
+
+# ---------------------------------------------------------------------------
+# Capability-flag rejection paths (resolve_backend = the single choke point)
+# ---------------------------------------------------------------------------
+
+REJECTIONS = [
+    # (cfg-builder, match)
+    (lambda: tiny_cfg(attn_impl="pallas", taylor=TaylorConfig(sym_state=True)),
+     "sym_state"),
+    (lambda: tiny_cfg(attn_impl="pallas", taylor=TaylorConfig(minus_one=True)),
+     "minus_one"),
+    (lambda: tiny_cfg(attn_impl="pallas", head_dim=256), "envelope"),
+    (lambda: tiny_cfg(attn_impl="pallas", attn_sharding="cp"), "chunked scan"),
+    (lambda: get_reduced("whisper-medium").replace(attn_impl="pallas"),
+     "cross"),
+    (lambda: get_reduced("whisper-medium").replace(attention="linear_elu"),
+     "cross-attention"),
+    (lambda: tiny_cfg(attention="softmax", attn_impl="pallas"), "impls"),
+    (lambda: tiny_cfg(attention="softmax", attn_sharding="cp"),
+     "context parallelism"),
+    (lambda: tiny_cfg(attention="ssm"), "block-level"),
+]
+
+
+@pytest.mark.parametrize(
+    "build,match", REJECTIONS, ids=[m for _, m in REJECTIONS]
+)
+def test_capability_flag_rejections(build, match):
+    with pytest.raises(ValueError, match=match):
+        resolve_backend(build())
+
+
+def test_unregistered_backend_name_rejected():
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        resolve_backend(tiny_cfg(attention="winograd"))
+
+
+def test_attn_impl_validated_at_config_construction():
+    with pytest.raises(ValueError, match="attn_impl"):
+        tiny_cfg(attn_impl="cuda")
+
+
+def test_context_parallel_entry_enforces_supports_cp():
+    from repro.core.context_parallel import attention_context_parallel
+
+    q = jnp.zeros((1, 2, 32, 8))
+    with pytest.raises(ValueError, match="context parallelism"):
+        attention_context_parallel(
+            q, q[:, :1], q[:, :1], tiny_cfg(attention="linear_elu"),
+            mesh=None, axis="sp",
+        )
+
+
+def test_slot_state_kinds_resolve_through_registry():
+    from repro.serve.slots import slot_state_kinds
+
+    assert slot_state_kinds(tiny_cfg()) == {"attn": "moments"}
+    assert slot_state_kinds(tiny_cfg(attention="softmax")) == {"attn": "kv"}
+    zamba = get_reduced("zamba2-7b")
+    kinds = slot_state_kinds(zamba)
+    assert kinds["mamba"] == "ssm"
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: public taylor state helpers, KV length clamp
+# ---------------------------------------------------------------------------
+
+
+def test_taylor_prefill_state_matches_chunk_scan(rng):
+    """The public helper must produce bit-compatible state with the chunked
+    scan's return_state handoff (the serve prefill contract)."""
+    from repro.core import taylor_attention_chunked, taylor_prefill_state
+
+    cfg = TaylorConfig()
+    k = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+    _, state_scan = taylor_attention_chunked(q, k, v, cfg, chunk=16, return_state=True)
+    state_helper = taylor_prefill_state(k, v, cfg)
+    for a, b in zip(state_scan, state_helper):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_taylor_state_read_matches_noncausal(rng):
+    """state_read(q_t) against the full-sequence state == the non-causal
+    (cross-attention) oracle at that query."""
+    from repro.core import (
+        taylor_attention_noncausal,
+        taylor_prefill_state,
+        taylor_state_read,
+    )
+
+    cfg = TaylorConfig()
+    k = jnp.asarray(rng.normal(size=(1, 2, 24, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 24, 8)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(1, 4, 5, 8)), jnp.float32)
+    oracle = taylor_attention_noncausal(q, k, v, cfg)
+    state = taylor_prefill_state(k, v, cfg)
+    got = taylor_state_read(state, q[:, :, 2, :], cfg)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(oracle[:, :, 2, :]), atol=1e-4
+    )
+
+
+def test_decode_kv_length_clamped_for_retired_slots(rng):
+    """Regression (PR 3): a retired slot decoding at pos >= n_max must not
+    report cache.length > capacity — the write index was already clamped,
+    the length now is too."""
+    from repro.models.attention import attention_decode, attention_init, init_cache
+
+    cfg = tiny_cfg(attention="softmax")
+    params = attention_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    n_max = 8
+    cache = init_cache(cfg, batch=2, n_max=n_max, dtype=jnp.float32)
+    x_t = jnp.asarray(rng.normal(size=(2, cfg.d_model)), jnp.float32)
+    # row 0 decodes far past capacity (frozen retired slot), row 1 in range
+    pos = jnp.asarray([n_max + 5, 3], jnp.int32)
+    y, cache = attention_decode(params, x_t, cache, cfg, pos)
+    assert cache.length.tolist() == [n_max, 4]
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+# ---------------------------------------------------------------------------
+# Model-level impl parity: the Pallas kernels driving models/lm.py
+# ---------------------------------------------------------------------------
+
+PARITY_CASES = [
+    # (id, cfg overrides, seq)
+    ("order2-gqa", dict(), 32),
+    ("order1", dict(taylor=TaylorConfig(order=1)), 32),
+    ("mqa-nonmultiple", dict(n_kv_heads=1), 33),  # seq 33: kernel pads to 48
+]
+
+
+def _ce_loss(cfg, batch):
+    def loss(params):
+        logits, _ = lm_apply(params, batch, cfg)
+        lo = jax.nn.log_softmax(logits.astype(jnp.float32))
+        ll = jnp.take_along_axis(lo, batch["labels"][..., None], axis=-1)
+        return -jnp.mean(ll)
+
+    return loss
+
+
+@pytest.mark.parametrize(
+    "case", PARITY_CASES, ids=[c[0] for c in PARITY_CASES]
+)
+def test_lm_pallas_impl_matches_xla(rng, case):
+    """attn_impl='pallas' trains through models/lm.py: same logits and
+    same parameter grads as attn_impl='xla' (order 1/2, GQA/MQA,
+    non-chunk-multiple sequence)."""
+    _, overrides, seq = case
+    cfg_x = tiny_cfg(n_groups=1, **overrides).replace(attn_impl="xla")
+    cfg_p = cfg_x.replace(attn_impl="pallas")
+    assert resolve_backend(cfg_p).resolve_impl(cfg_p) == "pallas"
+
+    params = lm_init(jax.random.PRNGKey(0), cfg_x)
+    t = jnp.asarray(rng.integers(0, cfg_x.vocab, (2, seq)), jnp.int32)
+    batch = {"tokens": t, "labels": jnp.roll(t, -1, axis=1)}
+
+    logits_x, _ = lm_apply(params, batch, cfg_x)
+    logits_p, _ = lm_apply(params, batch, cfg_p)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(logits_x), atol=2e-4, rtol=2e-4
+    )
+
+    lx, gx = jax.value_and_grad(_ce_loss(cfg_x, batch))(params)
+    lp, gp = jax.value_and_grad(_ce_loss(cfg_p, batch))(params)
+    assert np.isfinite(float(lp))
+    np.testing.assert_allclose(float(lp), float(lx), atol=1e-5, rtol=1e-5)
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(gx),
+        jax.tree_util.tree_leaves_with_path(gp),
+    ):
+        assert np.all(np.isfinite(np.asarray(b))), path
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), atol=5e-4, rtol=5e-3,
+            err_msg=str(path),
+        )
+
+
+def test_auto_impl_resolves_xla_off_tpu():
+    """'auto' must not pick the interpreter off-TPU (it is a correctness
+    tool, not an execution engine) — and must stay inside the envelope."""
+    backend = get_backend("taylor")
+    assert backend.resolve_impl(tiny_cfg()) == "xla"
+    assert backend.resolve_impl(tiny_cfg(attn_impl="pallas")) == "pallas"
+    sym = tiny_cfg(taylor=TaylorConfig(sym_state=True))
+    assert backend.resolve_impl(sym) == "xla"
+
+
+def test_custom_backend_roundtrip():
+    """Third-party registration: a custom backend resolves through
+    ModelConfig.attention like the built-ins."""
+
+    class NullBackend(AttentionBackend):
+        name = "null-test"
+        state_kind = "kv"
+
+        def apply(self, q, k, v, cfg, *, causal=True):
+            return jnp.zeros(q.shape[:-1] + (v.shape[-1],), v.dtype)
+
+    register_backend(NullBackend())
+    try:
+        cfg = tiny_cfg(attention="null-test")
+        assert resolve_backend(cfg) is get_backend("null-test")
+        out = get_backend("null-test").apply(
+            jnp.ones((1, 2, 4, 8)), jnp.ones((1, 1, 4, 8)),
+            jnp.ones((1, 1, 4, 8)), cfg,
+        )
+        assert out.shape == (1, 2, 4, 8)
+    finally:
+        from repro.backends import registry as _reg
+
+        _reg._REGISTRY.pop("null-test", None)
