@@ -1,0 +1,209 @@
+"""Regenerate the README's measured tables from the BENCH_*.json files.
+
+The README carries three GENERATED markdown tables — the backend×impl
+matrix (BENCH_attention.json), serve throughput (BENCH_serve.json) and
+sharded-serve parity/overhead (BENCH_serve_sharded.json) — between marker
+comments:
+
+    <!-- BEGIN GENERATED: <name> (benchmarks/render_tables.py --write) -->
+    ...table...
+    <!-- END GENERATED: <name> -->
+
+``--write`` rewrites the regions in place from the checked-in JSON;
+``--check`` (the CI mode) exits 1 when the README drifts from what the
+JSON renders to — so the tables can never silently rot behind the
+benchmark data.  Benchmarks change the JSON, ``--write`` syncs the
+README, CI enforces the sync.
+
+Usage:
+    python benchmarks/render_tables.py --check   # verify (CI)
+    python benchmarks/render_tables.py --write   # regenerate README
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+
+BEGIN = "<!-- BEGIN GENERATED: {name} (benchmarks/render_tables.py --write) -->"
+END = "<!-- END GENERATED: {name} -->"
+
+
+def _load(name: str) -> dict:
+    path = pathlib.Path(__file__).parent / name
+    return json.loads(path.read_text())
+
+
+def _derived(row: dict) -> dict:
+    """'k=v;k=v;...' -> {k: v} (values stay strings)."""
+    out = {}
+    for part in row.get("derived", "").split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _table(header: list, rows: list) -> list:
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "|".join("---" for _ in header) + "|"]
+    lines += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+    return lines
+
+
+def render_backend_impl() -> list:
+    """Backend×impl matrix: every registered (backend, impl) pair timed
+    through the same ``backend.apply`` protocol call."""
+    data = _load("BENCH_attention.json")
+    rows = []
+    for name, row in sorted(data.items()):
+        m = re.match(r"attention_(.+)_(xla|pallas)$", name)
+        if not m:
+            continue
+        d = _derived(row)
+        rows.append((
+            f"`{m.group(1)}`", f"`{d.get('impl', m.group(2))}`",
+            f"{row['us_per_call']:.1f}", d.get("state_kind", "?"),
+            "✓" if d.get("supports_cp") == "True" else "✗",
+            d.get("max_err_vs_xla", "—"),
+        ))
+    return _table(
+        ["backend", "impl", "µs/call (CPU)", "state kind", "CP",
+         "max err vs xla"],
+        rows,
+    )
+
+
+_SERVE_ROWS = (
+    ("serve_decode_loop_sequential", "per-token loop, sequential requests"),
+    ("serve_decode_engine_continuous", "engine, continuous batching"),
+    ("serve_decode_loop_batched", "per-token loop, uniform batch"),
+    ("serve_decode_engine_uniform", "engine, uniform batch"),
+    ("serve_e2e_loop_sequential", "end-to-end loop, sequential"),
+    ("serve_e2e_engine_continuous", "end-to-end engine, continuous"),
+)
+
+
+def render_serve() -> list:
+    """Serve throughput: continuous-batching engine vs the per-token loop
+    (decode-phase and end-to-end rows of BENCH_serve.json)."""
+    data = _load("BENCH_serve.json")
+    rows = []
+    for key, label in _SERVE_ROWS:
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        rows.append((
+            label, f"`{key}`", d.get("tok_s", "—"),
+            d.get("speedup_vs_loop", "—"),
+        ))
+    d = _derived(data.get("serve_slot_state_bytes", {}))
+    footer = []
+    if "bytes_per_slot" in d:
+        footer = [
+            "",
+            f"Per-slot decode state: **{d['bytes_per_slot']} bytes** "
+            f"({d.get('slots', '?')} slots, taylor backend — O(1) in "
+            "context length).",
+        ]
+    return _table(
+        ["workload", "row", "tokens/s (CPU)", "speedup vs loop"], rows
+    ) + footer
+
+
+def render_serve_sharded() -> list:
+    """Sharded-serve rows: decode parity/overhead per mesh + chunked
+    prefill (BENCH_serve_sharded.json)."""
+    data = _load("BENCH_serve_sharded.json")
+    rows = []
+    for key in ("serve_sharded_single_ref", "serve_sharded_decode_tp",
+                "serve_sharded_decode_slots"):
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        rows.append((
+            f"`{key}`", d.get("mesh", "—"), d.get("tok_s", "—"),
+            d.get("tokens_match", "—"), d.get("overhead_vs_single", "—"),
+        ))
+    out = _table(
+        ["row", "mesh", "tokens/s (CPU)", "token parity",
+         "overhead vs 1×1"],
+        rows,
+    )
+    if "serve_prefill_chunked" in data:
+        d = _derived(data["serve_prefill_chunked"])
+        out += [
+            "",
+            f"Chunked prefill: {d.get('dispatches', '?')} bounded "
+            f"dispatches, {d.get('ratio_vs_whole', '?')}× whole-prompt "
+            f"wall (CPU), max logit diff {d.get('max_logit_diff', '?')} "
+            "vs whole-prompt prefill.",
+        ]
+    return out
+
+
+RENDERERS = {
+    "backend-impl": render_backend_impl,
+    "serve-throughput": render_serve,
+    "serve-sharded": render_serve_sharded,
+}
+
+
+def _apply(text: str) -> str:
+    """Replace every marker region in ``text`` with its rendered table."""
+    for name, fn in RENDERERS.items():
+        begin, end = BEGIN.format(name=name), END.format(name=name)
+        if begin not in text or end not in text:
+            raise SystemExit(
+                f"README.md is missing the generated-table markers for "
+                f"{name!r} ({begin})"
+            )
+        block = begin + "\n" + "\n".join(fn()) + "\n" + end
+        pattern = re.escape(begin) + r".*?" + re.escape(end)
+        text = re.sub(pattern, lambda _m: block, text, count=1, flags=re.S)
+    return text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true",
+                      help="exit 1 if README tables drift from BENCH_*.json")
+    mode.add_argument("--write", action="store_true",
+                      help="rewrite the README tables in place")
+    args = ap.parse_args(argv)
+
+    current = README.read_text()
+    rendered = _apply(current)
+    if args.write:
+        if rendered != current:
+            README.write_text(rendered)
+            print("README.md tables regenerated")
+        else:
+            print("README.md tables already up to date")
+        return 0
+    if rendered != current:
+        import difflib
+
+        diff = difflib.unified_diff(
+            current.splitlines(), rendered.splitlines(),
+            "README.md (checked in)", "README.md (rendered from BENCH_*.json)",
+            lineterm="",
+        )
+        print("\n".join(diff))
+        print("\nREADME tables drift from BENCH_*.json — run "
+              "`python benchmarks/render_tables.py --write` and commit.",
+              file=sys.stderr)
+        return 1
+    print("README tables match BENCH_*.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

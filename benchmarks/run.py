@@ -8,11 +8,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_quality      — §5 "Application" (left empty in the paper)
   bench_longcontext  — O(1)-state decode economics (beyond-paper)
   bench_serve        — continuous-batching engine vs per-token loop
+  bench_serve_sharded — mesh-sharded engine parity/overhead + chunked prefill
 
-Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json`` and
-``BENCH_serve.json`` (name -> {us_per_call, derived}) next to this file
-so the backend, kernel and serving perf trajectories are machine-readable
-across PRs, not just printed.  Schema documented in README.md §Benchmarks.
+Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json``,
+``BENCH_serve.json`` and ``BENCH_serve_sharded.json`` (name ->
+{us_per_call, derived}) next to this file so the backend, kernel and
+serving perf trajectories are machine-readable across PRs, not just
+printed.  Schema documented in README.md §Benchmarks; the README tables
+are regenerated from these files by benchmarks/render_tables.py (CI
+fails on drift).
 """
 
 from __future__ import annotations
@@ -41,14 +45,17 @@ def main() -> None:
         bench_longcontext,
         bench_quality,
         bench_serve,
+        bench_serve_sharded,
     )
 
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
-    json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {}}
+    json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {},
+                 "bench_serve_sharded": {}}
     for mod in (bench_approx, bench_complexity, bench_attention, bench_kernel,
-                bench_longcontext, bench_quality, bench_serve):
+                bench_longcontext, bench_quality, bench_serve,
+                bench_serve_sharded):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
@@ -60,7 +67,8 @@ def main() -> None:
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
     for name, out_name in (("bench_attention", "BENCH_attention.json"),
                            ("bench_kernel", "BENCH_kernel.json"),
-                           ("bench_serve", "BENCH_serve.json")):
+                           ("bench_serve", "BENCH_serve.json"),
+                           ("bench_serve_sharded", "BENCH_serve_sharded.json")):
         if json_rows[name]:
             out_path = pathlib.Path(__file__).parent / out_name
             out_path.write_text(json.dumps(json_rows[name], indent=2) + "\n")

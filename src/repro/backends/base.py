@@ -39,6 +39,7 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
+import jax.numpy as jnp
 
 Array = jax.Array
 
@@ -125,6 +126,46 @@ class AttentionBackend:
         token attends to itself.  Returns ``(out [b, h, dv], new_cache)``."""
         raise NotImplementedError(self.name)
 
+    def prefill_chunk(self, cache, q: Array, k: Array, v: Array, cfg, pos: Array):
+        """Advance a decode state by a CHUNK of prompt tokens in one call.
+
+        The chunked-prefill building block (serving: long-prompt admission
+        must not monopolise the device between decode blocks — see
+        docs/serving.md §Chunked prefill).  Semantically identical to
+        ``decode_step`` applied token by token over the chunk; backends
+        override it with a batched form when one exists (the Taylor chunk
+        scan continues from ``cache`` via ``initial_state``).
+
+        Args:
+          cache: decode state to continue from (``init_cache`` zeros or the
+            state of the previous chunk).
+          q: chunk queries ``[b, h, c, d]``.
+          k: chunk keys ``[b, hk, c, d]`` (``h % hk == 0``).
+          v: chunk values ``[b, hk, c, dv]``.
+          cfg: model config.
+          pos: ``[b, c]`` int32 absolute 0-based positions of the chunk
+            tokens (per batch row).
+
+        Returns:
+          ``(out [b, h, c, dv], new_cache)`` — ``out[:, :, i]`` attends to
+          every chunk token ``<= i`` plus everything already in ``cache``
+          (inclusive causal semantics, matching ``decode_step``).
+        """
+
+        def body(cache, xs):
+            q_t, k_t, v_t, p_t = xs
+            o_t, cache = self.decode_step(cache, q_t, k_t, v_t, cfg, p_t)
+            return cache, o_t
+
+        xs = (
+            jnp.moveaxis(q, 2, 0),
+            jnp.moveaxis(k, 2, 0),
+            jnp.moveaxis(v, 2, 0),
+            jnp.moveaxis(pos, 1, 0),
+        )
+        cache, outs = jax.lax.scan(body, cache, xs)
+        return jnp.moveaxis(outs, 0, 2), cache
+
     def merge_state(self, a, b):
         """Merge the states of two CONSECUTIVE sequence shards (context
         parallelism).  Only meaningful when ``supports_cp``."""
@@ -141,6 +182,50 @@ class AttentionBackend:
             f"attention backend {self.name!r} does not support context "
             "parallelism"
         )
+
+    # -- protocol: decode-state sharding (mesh serving) ----------------------
+
+    def cache_pspec(self, cfg):
+        """LOGICAL partition axes of this backend's decode state.
+
+        A pytree congruent to ``init_cache``'s output whose leaves are
+        ``PartitionSpec``s of *logical* axis names ("dp" = the batch/slot
+        axis, "tp" = the head axis) — resolved to physical mesh axes,
+        divisibility-aware, by ``distributed.sharding.slot_cache_specs``.
+        The resolver moves a dropped "tp" to the leaf's LAST dim when that
+        divides instead (MQA: 1 kv head collapses the head axis, so Taylor
+        moment states shard over d_v).
+
+        The base implementation describes the KV-cache layout
+        (``state_kind="kv"`` backends: slots over dp, kv heads over tp);
+        O(1)-state backends override it alongside ``init_cache``.
+
+        Args:
+          cfg: model config.
+
+        Returns:
+          Pytree of logical ``PartitionSpec`` leaves congruent to
+          ``init_cache(cfg, ...)``.
+        """
+        from repro.backends.state import kv_cache_pspec  # noqa: PLC0415
+
+        return kv_cache_pspec()
+
+    def cross_cache_pspec(self, cfg):
+        """Logical partition axes of the cross-attention read state.
+
+        Defaults to ``cache_pspec`` — every built-in backend's cross state
+        has the same pytree structure as its self-attention decode state
+        (``init_cross_cache`` mirrors ``init_cache``).
+
+        Args:
+          cfg: model config.
+
+        Returns:
+          Pytree of logical ``PartitionSpec`` leaves congruent to
+          ``init_cross_cache(cfg, ...)``.
+        """
+        return self.cache_pspec(cfg)
 
     # -- protocol: cross-attention state (supports_cross backends) ----------
 

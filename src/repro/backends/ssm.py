@@ -64,6 +64,28 @@ class SSMBackend(AttentionBackend):
 
         return ssm.mamba_decode_step(params, x_t, cache, cfg)
 
+    def cache_pspec(self, cfg):
+        """Logical axes of the ``MambaCache``: slots over "dp"; the SSD
+        head dim of ``ssd [b, H, P, N]`` and the conv-channel dim of
+        ``conv [b, W-1, channels]`` over "tp" (both follow the in_proj
+        tensor-parallel split of the block params).
+
+        Args:
+          cfg: model config.
+
+        Returns:
+          ``MambaCache`` of logical ``PartitionSpec`` leaves congruent to
+          ``init_cache``'s output.
+        """
+        from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+
+        from repro.models.ssm import MambaCache  # noqa: PLC0415 (cycle)
+
+        return MambaCache(
+            conv=P("dp", None, "tp"),
+            ssd=P("dp", "tp", None, None),
+        )
+
     def merge_state(self, a, b):
         raise NotImplementedError(
             "SSD states merge with decay weighting, not addition — use "

@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import NamedTuple, Union
 
 import jax
+from jax.sharding import PartitionSpec as P
 
 from repro.core import TaylorState
 
@@ -37,3 +38,24 @@ class CrossCache(NamedTuple):
     backends) or the global TaylorState (moments-kind backends)."""
 
     kv: AttnCache
+
+
+def kv_cache_pspec() -> KVCache:
+    """Logical partition axes of a ``KVCache`` (the ``state_kind="kv"``
+    decode-state sharding: slots over "dp", kv heads over "tp").
+
+    Used by ``AttentionBackend.cache_pspec``'s default implementation and
+    resolved against a concrete mesh by
+    ``distributed.sharding.slot_cache_specs`` (divisibility-aware — e.g.
+    MQA's single kv head drops "tp" and the resolver falls back to the
+    last dim).
+
+    Returns:
+      ``KVCache`` whose leaves are logical ``PartitionSpec``s for
+      ``k [b, hk, n_max, hd]``, ``v`` (same) and ``length [b]``.
+    """
+    return KVCache(
+        k=P("dp", "tp", None, None),
+        v=P("dp", "tp", None, None),
+        length=P("dp"),
+    )

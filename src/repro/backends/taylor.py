@@ -144,6 +144,67 @@ class TaylorBackend(AttentionBackend):
         o, cache = taylor_decode_step(cache, q, k, v, cfg.taylor)
         return o, cache
 
+    def prefill_chunk(self, cache, q, k, v, cfg, pos):
+        """Chunk-scan continuation: one quadratic intra-chunk tile plus the
+        inter-chunk read of the carried moment state (``initial_state``) —
+        the MXU-friendly form of advancing the decode state by a whole
+        chunk of prompt tokens (vs the base class's token-by-token scan).
+
+        Args:
+          cache: ``TaylorState`` to continue from.
+          q: chunk queries ``[b, h, c, d]``.
+          k: chunk keys ``[b, hk, c, d]``.
+          v: chunk values ``[b, hk, c, dv]``.
+          cfg: model config.
+          pos: ``[b, c]`` positions (unused — the moment state is
+            position-free; RoPE is applied by the model layer).
+
+        Returns:
+          ``(out [b, h, c, dv], new TaylorState)`` with all ``c`` tokens
+          absorbed.
+        """
+        del pos
+        return taylor_attention_chunked(
+            q, k, v, cfg.taylor, chunk=q.shape[2],
+            initial_state=cache, return_state=True,
+        )
+
+    def cache_pspec(self, cfg):
+        """Logical axes of the ``TaylorState`` moment tensors: slots over
+        "dp", kv heads over "tp"; when the kv-head dim cannot shard (MQA,
+        or heads not divisible by the axis) the resolver's last-dim
+        fallback puts "tp" on d_v for the s0/s1/s2 value moments instead.
+
+        Args:
+          cfg: model config (``order``/``sym_state`` decide which moment
+            leaves exist and their shapes).
+
+        Returns:
+          ``TaylorState`` of logical ``PartitionSpec`` leaves congruent to
+          ``init_cache``'s output.
+        """
+        from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+
+        from repro.core import TaylorState  # noqa: PLC0415
+
+        t = cfg.taylor
+        second = t.order >= 2
+        # sym_state packs z2/s2 to [b, k, D2(, v)]; same leading axes.
+        z2 = P("dp", "tp", None) if t.sym_state else P("dp", "tp", None, None)
+        s2 = (
+            P("dp", "tp", None, None)
+            if t.sym_state
+            else P("dp", "tp", None, None, None)
+        )
+        return TaylorState(
+            n0=P("dp", "tp"),
+            s0=P("dp", "tp", None),
+            z1=P("dp", "tp", None),
+            s1=P("dp", "tp", None, None),
+            z2=z2 if second else None,
+            s2=s2 if second else None,
+        )
+
     def merge_state(self, a, b):
         return merge_states(a, b)
 

@@ -11,7 +11,11 @@ Logical axes (bound to physical axes by distributed.api rules):
   fsdp — parameter sharding (ZeRO-3-style; all-gathered per layer in scan)
   tp   — tensor parallel (heads / ffn / vocab)
   ep   — expert parallel (same physical axis as tp by default)
-  dp   — batch (activations / caches only)
+  dp   — batch (activations / caches only; in SERVING, the slot axis)
+
+``slot_cache_specs`` derives the serve engine's slotted-cache layout from
+the per-backend ``cache_pspec`` hooks (dispatch by registry
+``state_kind`` — docs/serving.md §Sharding).
 """
 
 from __future__ import annotations
@@ -169,6 +173,125 @@ def batch_specs(batch_shapes: Any, mesh: Mesh, rules: Rules) -> Any:
         return P(phys, *([None] * (len(leaf.shape) - 1)))
 
     return jax.tree_util.tree_map(one, batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Slotted serve-cache specs: per-backend state layout, resolved per leaf.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_logical_spec(
+    logical: P, shape: Sequence[int], rules: Rules, mesh: Mesh
+) -> P:
+    """Resolve one leaf's LOGICAL spec ("dp"/"tp"/None per dim) to physical
+    axes, divisibility-aware, with the head→last-dim "tp" fallback.
+
+    If the dim carrying "tp" (the head dim by the backend hook convention)
+    is not divisible by the tp axis — MQA kv=1 being the canonical case —
+    "tp" moves to the leaf's LAST dim when that one divides (Taylor moment
+    states then shard their d_v columns instead of their heads)."""
+    entries: list = []
+    used = set()
+    for name, size in zip(tuple(logical), shape):
+        phys = _resolve_dim(name, size, rules, mesh)
+        key = tuple(phys) if isinstance(phys, tuple) else phys
+        if phys is not None and key in used:
+            phys = None
+        if phys is not None:
+            used.add(key)
+        entries.append(phys)
+    logical_t = tuple(logical)
+    if "tp" in logical_t:
+        i = logical_t.index("tp")
+        if entries[i] is None and i < len(shape) - 1 and logical_t[-1] is None:
+            phys = _resolve_dim("tp", shape[-1], rules, mesh)
+            key = tuple(phys) if isinstance(phys, tuple) else phys
+            if phys is not None and key not in used:
+                entries[-1] = phys
+    return P(*entries)
+
+
+def slot_cache_specs(
+    cfg: Any, max_slots: int, n_max: int, mesh: Mesh, rules: Rules,
+    dtype: Any = None,
+) -> Any:
+    """PartitionSpec pytree for the serve engine's slotted decode cache.
+
+    Mirrors the exact pytree ``models.lm.lm_init_caches(cfg, max_slots,
+    n_max)`` produces (group caches stacked ``[n_groups, run_len, slots,
+    ...]``, tail caches ``[slots, ...]``, optional ``kv_src``).  The layout
+    of each block's state comes from the owning backend's ``cache_pspec``
+    hook — dispatch is by the registry's ``state_kind``, never by
+    ``if backend == ...`` chains:
+
+      * ``kv``      — slots over "dp", kv heads over "tp" (KV rows are
+        per-head independent).
+      * ``moments`` — slots over "dp", kv heads over "tp"; when MQA
+        collapses the head axis (1 kv head) the resolver's last-dim
+        fallback shards the value columns (d_v) of s0/s1/s2 instead.
+      * ``ssm``     — slots over "dp", SSD heads / conv channels over "tp".
+
+    Every logical axis is resolved divisibility-aware against the mesh, so
+    the same call serves 1×1 (fully replicated — the single-device
+    degenerate case), slot-sharded N×1 and tensor-parallel 1×N meshes.
+
+    Args:
+      cfg: model config (block pattern + backend resolution).
+      max_slots: slot count the cache is built with.
+      n_max: per-slot KV capacity (KV-kind leaves only).
+      mesh: target mesh.
+      rules: logical→physical axis rules (``rules_for_mesh(mesh)``).
+      dtype: cache dtype (shapes only; defaults to ``cfg.dtype``).
+
+    Returns:
+      Pytree of ``PartitionSpec`` congruent to the ``lm_init_caches``
+      output (use ``named_shardings`` to bind it to the mesh).
+    """
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.backends import get_backend, resolve_backend  # noqa: PLC0415
+    from repro.backends.state import CrossCache  # noqa: PLC0415
+    from repro.models.lm import _runs, lm_init_caches  # noqa: PLC0415
+
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    cache_shapes = jax.eval_shape(
+        lambda: lm_init_caches(cfg, max_slots, n_max, dtype)
+    )
+    backend = resolve_backend(cfg)
+
+    def one(kind: str):
+        if kind == "mamba":
+            return get_backend("ssm").cache_pspec(cfg)
+        self_spec = backend.cache_pspec(cfg)
+        if kind != "cross":
+            return self_spec
+        return (self_spec, CrossCache(kv=backend.cross_cache_pspec(cfg)))
+
+    is_p = lambda x: isinstance(x, P)
+
+    def stack(tree):
+        # group caches carry [n_groups, run_len] stacking dims in front.
+        return jax.tree_util.tree_map(
+            lambda p: P(None, None, *tuple(p)), tree, is_leaf=is_p
+        )
+
+    logical = {
+        "group": (
+            tuple(stack(one(kind)) for kind, _ in _runs(cfg.pattern))
+            if cfg.n_groups
+            else ()
+        ),
+        "tail": tuple(one(k) for k in cfg.tail),
+        "kv_src": (
+            P("dp", None, None) if cfg.family in ("vlm", "encdec") else None
+        ),
+    }
+    return jax.tree_util.tree_map(
+        lambda p, leaf: _resolve_logical_spec(p, leaf.shape, rules, mesh),
+        logical,
+        cache_shapes,
+        is_leaf=is_p,
+    )
 
 
 def cache_specs(cache_shapes: Any, mesh: Mesh, rules: Rules, batch: int) -> Any:

@@ -291,6 +291,23 @@ def taylor_bwd_pallas(
     Unlike the forward there is no d_v tiling: dden couples all value
     columns, so DV must fit one 128-lane tile (ops.py falls back to the
     XLA path otherwise).
+
+    Args:
+      q: queries ``[BK, G, N, D]`` (pre-normalised, padded — the
+        ``ops._kernel_layout`` contract).
+      k: keys ``[BK, N, D]``.
+      v: values ``[BK, N, DV]``.
+      dout: output cotangent ``[BK, G, N, DV]`` (zero-padded like v).
+      out: the SAVED forward output ``[BK, G, N, DV]`` — pass 1 derives
+        the denominator cotangent from it (flash-attention residual
+        trick) instead of recomputing the numerator.
+      alpha: logit down-scale (must match the forward launch).
+      order: Taylor order (1 or 2).
+      chunk: sequence chunk of the scan (must divide N).
+      interpret: run under the Pallas interpreter (CPU/tests).
+
+    Returns:
+      ``(dq [BK, G, N, D], dk [BK, N, D], dv [BK, N, DV])`` f32.
     """
     bk, g, n, d = q.shape
     dv = v.shape[-1]

@@ -21,6 +21,19 @@ def taylor_attention_ref(
     alpha: float = 3.0,
     order: int = 2,
 ) -> jax.Array:
+    """O(n²) reference for the kernels (grouped layout, no LayerNorm).
+
+    Args:
+      q: queries ``[B, HK, G, N, D]`` (pre-normalised, grouped — the
+        layout ``ops._kernel_layout`` feeds the kernels).
+      k: keys ``[B, HK, N, D]``.
+      v: values ``[B, HK, N, DV]``.
+      alpha: logit down-scale (scores are ``q·k / (alpha·√D)``).
+      order: Taylor order of the exp expansion (1 or 2).
+
+    Returns:
+      Causally-masked normalised attention output ``[B, HK, G, N, DV]``.
+    """
     b, hk, g, n, d = q.shape
     a = 1.0 / (alpha * d**0.5)
     s = jnp.einsum(

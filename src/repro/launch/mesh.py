@@ -26,3 +26,28 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     if data * model > n:
         data, model = n, 1
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(slots: int = 1, model: int = 1) -> Mesh:
+    """Serving mesh: ("data", "model") where "data" shards the SLOT axis of
+    the serve engine's decode cache (continuous batching: each device group
+    owns a contiguous run of slots) and "model" carries tensor parallelism
+    over the weights via the same ``param_specs`` rules training uses.
+
+    The axis names deliberately match ``make_host_mesh`` so
+    ``rules_for_mesh`` applies unchanged (serving binds "dp" to the slot
+    axis instead of the batch axis — same logical name, see
+    docs/serving.md §Sharding).  A 1×1 mesh is the degenerate single-device
+    engine, bit-identical to running without a mesh.
+
+    Unlike ``make_host_mesh`` this REFUSES to shrink silently: a serving
+    deployment that comes up on the wrong topology should fail loudly, not
+    serve at a fraction of the provisioned capacity.
+    """
+    n = len(jax.devices())
+    if slots * model > n:
+        raise ValueError(
+            f"make_serve_mesh({slots}×{model}) needs {slots * model} "
+            f"devices but only {n} are visible"
+        )
+    return jax.make_mesh((slots, model), ("data", "model"))

@@ -42,6 +42,7 @@ __all__ = [
     "attention_decode",
     "attention_init",
     "attention_prefill",
+    "attention_prefill_chunk",
     "cross_decode",
     "cross_prefill",
     "init_cache",
@@ -164,6 +165,45 @@ def attention_prefill(
     q = _project_q(params, x, cfg, positions)
     k, v = _project_kv(params, x, cfg, positions)
     o, cache = backend.prefill(q, k, v, cfg, n_max)
+    return _out_proj(params, o, x.dtype), cache
+
+
+def attention_prefill_chunk(
+    params,
+    x: Array,  # [b, c, d_model]
+    cache: AttnCache,
+    cfg: ModelConfig,
+    positions: Array,  # [b, c] int32 absolute positions
+) -> Tuple[Array, AttnCache]:
+    """Advance a decode cache by a CHUNK of prompt tokens.
+
+    The chunked-prefill middle ground between ``attention_prefill`` (whole
+    prompt, fresh cache) and ``attention_decode`` (one token): projects the
+    chunk, applies RoPE at the chunk's absolute positions, and hands the
+    state continuation to ``backend.prefill_chunk`` (the Taylor backend
+    runs one intra-chunk tile + inter-chunk state read; KV backends scan
+    their per-token write).
+
+    Args:
+      params: attention block params (wq/wk/wv/wo).
+      x: chunk activations ``[b, c, d_model]``.
+      cache: decode state to continue from (``init_cache`` zeros or the
+        previous chunk's output state).
+      cfg: model config.
+      positions: ``[b, c]`` int32 absolute 0-based positions of the chunk
+        tokens (per batch row — serving admits at per-slot offsets).
+
+    Returns:
+      ``(y [b, c, d_model], new_cache)`` — identical (to fp tolerance) to
+      running ``attention_decode`` over the chunk token by token.
+    """
+    backend = resolve_backend(cfg)
+    # positions [b, 1, c] broadcast against [b, h, c, hd] inside rope; the
+    # shared projection helpers keep the sharding constraints applied.
+    pos_bc = positions[:, None, :]
+    q = _project_q(params, x, cfg, pos_bc)
+    k, v = _project_kv(params, x, cfg, pos_bc)
+    o, cache = backend.prefill_chunk(cache, q, k, v, cfg, positions)
     return _out_proj(params, o, x.dtype), cache
 
 

@@ -138,6 +138,73 @@ def _cross_apply_full(params, h: Array, kv_src: Array, cfg: ModelConfig) -> Arra
     return attn.attention_apply(params, h, cfg, None, causal=False, kv_src=kv_src)
 
 
+def block_prefill_chunk(
+    params,
+    kind: str,
+    x: Array,  # [b, c, d_model]
+    cache: Any,
+    cfg: ModelConfig,
+    positions: Array,  # [b, c] int32 absolute positions
+):
+    """Advance one block's decode cache by a CHUNK of prompt tokens.
+
+    The per-block step of ``lm_prefill_chunk``: same residual structure as
+    ``block_decode`` but over ``c`` tokens at once.  Self-attention goes
+    through ``attention_prefill_chunk`` (backend ``prefill_chunk`` hook);
+    the mamba kind scans its token recurrence inside the dispatch; cross
+    blocks re-read their FIXED source state per chunk token (vmapped —
+    the cross state never changes during decode).
+
+    Args:
+      params: block params.
+      kind: block kind ("attn" / "shared_attn" / "moe" / "mamba" / "cross").
+      x: chunk activations ``[b, c, d_model]``.
+      cache: this block's decode cache (same structure ``block_prefill``
+        returns).
+      cfg: model config.
+      positions: ``[b, c]`` absolute positions of the chunk tokens.
+
+    Returns:
+      ``(x [b, c, d_model], new_cache)``.
+    """
+    eps = cfg.norm_eps
+    if kind == "mamba":
+        ssm_backend = get_backend("ssm")
+        h = norm_apply(params["norm1"], x, cfg.norm, eps)
+
+        def body(c, h_t):
+            y_t, c = ssm_backend.decode_step(params["mamba"], h_t, c, cfg, None)
+            return c, y_t
+
+        cache, ys = jax.lax.scan(body, cache, jnp.moveaxis(h, 1, 0))
+        return x + jnp.moveaxis(ys, 0, 1), cache
+    if kind == "cross":
+        acache, ccache = cache
+        h = norm_apply(params["norm1"], x, cfg.norm, eps)
+        y, acache = attn.attention_prefill_chunk(
+            params["attn"], h, acache, cfg, positions
+        )
+        x = x + y
+        hc = norm_apply(params["norm_c"], x, cfg.norm, eps)
+        x = x + jax.vmap(
+            lambda h_t: attn.cross_decode(params["cross"], h_t, ccache, cfg),
+            in_axes=1, out_axes=1,
+        )(hc)
+        h2 = norm_apply(params["norm2"], x, cfg.norm, eps)
+        x = x + mlp_apply(params["mlp"], h2, cfg.act)
+        return x, (acache, ccache)
+    h = norm_apply(params["norm1"], x, cfg.norm, eps)
+    y, cache = attn.attention_prefill_chunk(params["attn"], h, cache, cfg, positions)
+    x = x + y
+    h2 = norm_apply(params["norm2"], x, cfg.norm, eps)
+    if kind == "moe":
+        y2, _ = moe_mod.moe_apply(params["moe"], h2, cfg)
+        x = x + y2
+    else:
+        x = x + mlp_apply(params["mlp"], h2, cfg.act)
+    return x, cache
+
+
 def block_decode(
     params,
     kind: str,

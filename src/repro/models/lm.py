@@ -18,7 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.api import constrain
-from repro.models.blocks import block_apply, block_decode, block_init, block_prefill
+from repro.models.blocks import (
+    block_apply,
+    block_decode,
+    block_init,
+    block_prefill,
+    block_prefill_chunk,
+)
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     dense_init,
@@ -283,6 +289,91 @@ def lm_prefill(
     logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
     caches = {"group": group_caches, "tail": tuple(tail_caches), "kv_src": kv_src}
     return logits, caches
+
+
+def lm_prefill_chunk(
+    params, tokens: Array, caches, pos0, cfg: ModelConfig
+) -> Tuple[Array, Any]:
+    """Advance the decode caches by a CHUNK of prompt tokens.
+
+    The chunked-prefill step: structurally ``lm_decode_step`` widened to
+    ``c`` tokens — the caller loops it over a long prompt so no single
+    dispatch exceeds the chunk budget (serving admission must not stall
+    in-flight decode slots; see docs/serving.md §Chunked prefill).
+    Starting from ``lm_init_caches`` zeros and feeding the whole prompt
+    chunk by chunk reproduces ``lm_prefill``'s logits and final state to
+    fp tolerance (tested).
+
+    Decoder-only models only: vlm/encdec caches hold source-derived state
+    (``kv_src``/cross reads are position-independent, but their caches are
+    built by ``lm_prefill`` from the request extras) — the serve engine
+    falls back to whole-prompt prefill for those families.
+
+    Args:
+      params: model params.
+      tokens: ``[b, c]`` int32 chunk of prompt tokens.
+      caches: cache pytree from ``lm_init_caches`` (first chunk) or the
+        previous ``lm_prefill_chunk`` call.
+      pos0: scalar or ``[b]`` int32 absolute position of ``tokens[:, 0]``.
+      cfg: model config.
+
+    Returns:
+      ``(logits [b, vocab]`` of the chunk's LAST token``, new caches)``.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    b, c = tokens.shape
+    positions = (
+        jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (b,))[:, None]
+        + jnp.arange(c, dtype=jnp.int32)[None, :]
+    )  # [b, c]
+    x = embed_apply(params["embed"], tokens, dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(dtype)
+    elif cfg.pos == "sinusoidal":
+        from repro.models.layers import sinusoidal_pos as _sin  # noqa: PLC0415
+
+        x = x + _sin(positions.reshape(-1), cfg.d_model).reshape(
+            b, c, cfg.d_model
+        ).astype(dtype)
+    blocks = params["blocks"]
+    shared = blocks.get("shared")
+    runs = _runs(cfg.pattern)
+
+    def group_body(x, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for j, (kind, rl) in enumerate(runs):
+            def run_body(x, step_xs):
+                p, cch = step_xs
+                return block_prefill_chunk(
+                    shared if kind == "shared_attn" else p,
+                    kind, x, cch, cfg, positions,
+                )
+
+            rp = None if kind == "shared_attn" else group_params[f"r{j}"]
+            x, run_caches = jax.lax.scan(
+                run_body, x, (rp, group_caches[j]), length=rl
+            )
+            new_caches.append(run_caches)
+        return x, tuple(new_caches)
+
+    if blocks["group"]:
+        x, group_caches = jax.lax.scan(
+            group_body, x, (blocks["group"], caches["group"])
+        )
+    else:
+        group_caches = ()
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail):
+        p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
+        x, cch = block_prefill_chunk(p, kind, x, caches["tail"][i], cfg, positions)
+        tail_caches.append(cch)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
+    new = {"group": group_caches, "tail": tuple(tail_caches),
+           "kv_src": caches.get("kv_src")}
+    return logits, new
 
 
 def lm_decode_step(

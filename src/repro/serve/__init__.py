@@ -1,8 +1,10 @@
 """Serving: continuous-batching engine over a slotted Taylor-state cache.
 
-``ServeEngine`` + ``Request`` are the serving API (scheduler.py);
-``generate`` is the batch-convenience wrapper; ``generate_loop`` keeps the
-original per-token dispatch loop as the parity/benchmark baseline.
+``ServeEngine`` + ``Request`` are the serving API (scheduler.py) —
+optionally mesh-sharded (``mesh=``) and with chunked long-prompt
+admission (``prefill_chunk=``); see docs/serving.md.  ``generate`` is the
+batch-convenience wrapper; ``generate_loop`` keeps the original per-token
+dispatch loop as the parity/benchmark baseline.
 """
 
 from repro.serve.engine import (
@@ -11,6 +13,7 @@ from repro.serve.engine import (
     generate,
     generate_loop,
     prefill,
+    prefill_chunked,
     sample_tokens,
 )
 from repro.serve.scheduler import Request, ServeEngine
@@ -19,6 +22,7 @@ from repro.serve.slots import (
     init_slot_caches,
     read_slot,
     slot_bytes,
+    slot_cache_shardings,
     write_slot,
 )
 
@@ -32,8 +36,10 @@ __all__ = [
     "generate_loop",
     "init_slot_caches",
     "prefill",
+    "prefill_chunked",
     "read_slot",
     "sample_tokens",
     "slot_bytes",
+    "slot_cache_shardings",
     "write_slot",
 ]

@@ -7,6 +7,11 @@ in ONE device dispatch — a ``jax.lax.scan`` over ``lm_decode_step`` with
 per-slot position, stop and sampling state.  This file owns the compiled
 pieces; the scheduler owns admission and slot lifecycle.
 
+``build_decode_scan`` is the mesh-aware compilation point (the sharded
+engine pins the slotted-cache shardings so donation stays in place);
+``prefill_chunked`` is the bounded-dispatch admission path for long
+prompts (docs/serving.md §Chunked prefill).
+
 ``generate`` is kept as a thin compatibility wrapper over the engine (same
 signature as the original per-token loop); ``generate_loop`` preserves the
 old one-dispatch-per-token loop as the parity/benchmark baseline.
@@ -21,7 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.lm import lm_decode_step, lm_prefill
+from repro.models.lm import (
+    lm_decode_step,
+    lm_init_caches,
+    lm_prefill,
+    lm_prefill_chunk,
+)
 
 Array = jax.Array
 
@@ -73,6 +83,71 @@ def _jitted_prefill(cfg: ModelConfig, n_max: int):
 @functools.lru_cache(maxsize=32)
 def _jitted_decode_step(cfg: ModelConfig):
     return jax.jit(functools.partial(lm_decode_step, cfg=cfg), donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_prefill_chunk(cfg: ModelConfig):
+    # donate the caches: every chunk fully replaces them, and a long-prompt
+    # admission would otherwise hold two copies of the KV leaves alive.
+    return jax.jit(
+        functools.partial(lm_prefill_chunk, cfg=cfg), donate_argnums=(2,)
+    )
+
+
+def prefill_chunked(
+    params,
+    batch: Dict[str, Array],
+    cfg: ModelConfig,
+    n_max: int,
+    chunk: int,
+    cache_dtype=None,
+):
+    """Whole-prompt prefill as a sequence of bounded chunk dispatches.
+
+    Same contract as ``prefill`` — ``(last-token logits [b, vocab],
+    caches)``, matching it to fp tolerance — but no single device dispatch
+    processes more than ``chunk`` prompt tokens.  This is the long-prompt
+    admission path of the serve engine: between chunks the scheduler can
+    keep advancing in-flight decode slots, so a 500k-token prompt no
+    longer freezes every other stream for the whole prefill (see
+    docs/serving.md §Chunked prefill).
+
+    Decoder-only models only (``cfg.family == "lm"``): vlm/encdec prompts
+    need their source state built by ``lm_prefill`` from the request
+    extras.
+
+    Args:
+      params: model params.
+      batch: ``{"tokens": [b, n] int32}`` (no extras — see above).
+      cfg: model config.
+      n_max: per-slot KV capacity to allocate.
+      chunk: prompt tokens per dispatch (the admission budget; the final
+        chunk may be shorter).
+      cache_dtype: KV-cache dtype (defaults to ``cfg.dtype``).
+
+    Returns:
+      ``(logits [b, vocab]`` of the last prompt position``, caches)`` —
+      the same pytree structure ``prefill`` returns.
+    """
+    if cfg.family != "lm":
+        raise ValueError(
+            f"prefill_chunked supports decoder-only models; family "
+            f"{cfg.family!r} prompts carry source extras that whole-prompt "
+            "prefill must build (use prefill)"
+        )
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    tokens = jnp.asarray(batch["tokens"], jnp.int32)
+    b, n = tokens.shape
+    dtype = jnp.dtype(cache_dtype or cfg.dtype)
+    caches = lm_init_caches(cfg, b, n_max, dtype)
+    step = _jitted_prefill_chunk(cfg)
+    logits = None
+    for s in range(0, n, chunk):
+        logits, caches = step(
+            params, tokens[:, s : s + chunk], caches, jnp.asarray(s, jnp.int32)
+        )
+    return logits, caches
 
 
 # ---------------------------------------------------------------------------
@@ -127,13 +202,9 @@ def sample_tokens(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=64)
-def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
-    """Compiled ``steps``-token decode over all slots (see ``decode_scan``).
-
-    ``sampling``/``max_top_k`` are static specializations the scheduler
-    derives host-side from the occupied slots: the all-greedy common case
-    compiles to a pure argmax body (no rng, no sort/top_k)."""
+def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
+    """The (unjitted) ``steps``-token decode body shared by the
+    single-device and mesh-sharded compilations."""
 
     def scan_fn(params, caches, token, pos, active, temperature, top_k, eos_id, rng):
         def body(carry, _):
@@ -160,7 +231,59 @@ def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool, max_top_k:
         )
         return caches, token, pos, active, rng, toks, mask
 
-    return jax.jit(scan_fn, donate_argnums=(1,))
+    return scan_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
+    """Compiled ``steps``-token decode over all slots (see ``decode_scan``).
+
+    ``sampling``/``max_top_k`` are static specializations the scheduler
+    derives host-side from the occupied slots: the all-greedy common case
+    compiles to a pure argmax body (no rng, no sort/top_k)."""
+    return jax.jit(_decode_scan_fn(cfg, steps, sampling, max_top_k),
+                   donate_argnums=(1,))
+
+
+def build_decode_scan(
+    cfg: ModelConfig,
+    steps: int,
+    sampling: bool,
+    max_top_k: int,
+    cache_shardings=None,
+):
+    """Compile one ``decode_scan`` variant, optionally mesh-sharded.
+
+    With ``cache_shardings`` the cache output is PINNED to the slotted
+    layout (``slot_cache_shardings``) and the per-slot control vectors
+    (token/pos/active/…) to replicated — pinning is what makes the donated
+    cache buffer reusable in place across dispatches instead of being
+    re-laid-out by the partitioner.  Without it this is exactly the
+    single-device compilation ``decode_scan`` uses (shared lru cache).
+
+    Args:
+      cfg: model config (static).
+      steps: tokens per dispatch (static).
+      sampling: static — False compiles the argmax-only body.
+      max_top_k: static top-k bound (``-1`` = full-vocab sort fallback).
+      cache_shardings: ``NamedSharding`` pytree for the slotted cache, or
+        None for the single-device engine.
+
+    Returns:
+      A jitted callable with ``decode_scan``'s positional signature
+      (params, caches, token, pos, active, temperature, top_k, eos_id,
+      rng), caches donated.
+    """
+    if cache_shardings is None:
+        return _jitted_decode_scan(cfg, steps, bool(sampling), int(max_top_k))
+    mesh = jax.tree_util.tree_leaves(cache_shardings)[0].mesh
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    out_shardings = (cache_shardings, rep, rep, rep, rep, rep, rep)
+    return jax.jit(
+        _decode_scan_fn(cfg, steps, bool(sampling), int(max_top_k)),
+        donate_argnums=(1,),
+        out_shardings=out_shardings,
+    )
 
 
 def decode_scan(

@@ -18,27 +18,39 @@ Slot lifecycle (see DESIGN.md §Serving):
 Per-token cost is independent of how requests arrive: a request admitted
 into a busy batch produces the same tokens as a solo run (tested), because
 slots never interact — every op in the decode step is batch-parallel.
+
+Two orthogonal extensions (docs/serving.md):
+
+* ``mesh=`` runs the engine sharded — tensor-parallel weights
+  (``param_specs``), the slot axis data-sharded (``slot_cache_specs``),
+  cache-producing dispatches pinned + donated; decode output is
+  token-identical to the single-device engine (tested).
+* ``prefill_chunk=`` admits long prompts chunk-by-chunk (a PREFILLING
+  slot is reserved and fed one chunk per engine step), so admission
+  interleaves with in-flight decode instead of stalling it.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import itertools
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.serve import engine as engine_mod
 from repro.serve import slots as slots_mod
 from repro.serve.engine import (
     _jitted_prefill,
-    decode_scan,
+    _jitted_prefill_chunk,
     sample_tokens,
 )
-from repro.serve.slots import read_slot
 
 Array = jax.Array
 
@@ -80,7 +92,21 @@ class _Slot:
     rid: Optional[int] = None     # request id, None = free
     remaining: int = 0            # new-token budget left
     done: bool = False            # emitted eos (device went inactive)
+    prefilling: bool = False      # reserved for an in-progress chunked prefill
     out: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _PartialPrefill:
+    """An in-progress chunked admission: the request's prompt is being fed
+    into a reserved slot's batch-1 cache one chunk per engine step, so
+    decode blocks of the other slots interleave with long-prompt prefill."""
+
+    rid: int
+    slot: int
+    caches: Any           # batch-1 cache pytree being accumulated
+    consumed: int = 0     # prompt tokens absorbed so far
+    logits: Optional[Array] = None  # last chunk's final-position logits
 
 
 class ServeEngine:
@@ -107,6 +133,9 @@ class ServeEngine:
         decode_block: int = 16,
         rng: Optional[Array] = None,
         cache_dtype=None,
+        mesh=None,
+        rules=None,
+        prefill_chunk: Optional[int] = None,
     ):
         """Builds the engine and allocates the slotted cache.
 
@@ -122,16 +151,66 @@ class ServeEngine:
             batching granularity.
           rng: PRNG key for sampled decoding (defaults to PRNGKey(0)).
           cache_dtype: KV-cache dtype (defaults to ``cfg.dtype``).
+          mesh: optional ``jax.sharding.Mesh`` (``make_serve_mesh``) — the
+            engine runs end-to-end sharded: weights tensor-parallel via the
+            training ``param_specs`` rules, the slot cache laid out by
+            ``slot_cache_specs`` (slot axis over "data", heads/d_v over
+            "model"), every cache-producing dispatch pinned + donated.  A
+            1×1 mesh is the degenerate single-device engine; None (the
+            default) skips the mesh machinery entirely.
+          rules: logical→physical axis rules (default
+            ``rules_for_mesh(mesh)``).
+          prefill_chunk: when set, prompts longer than this are admitted
+            via CHUNKED prefill — at most ``prefill_chunk`` prompt tokens
+            per dispatch, interleaved with the decode blocks of in-flight
+            slots, so one long prompt no longer stalls every other stream
+            (decoder-only families; vlm/encdec fall back to whole-prompt
+            prefill).  None = whole-prompt admission (the original
+            behaviour).
         """
         if max_slots < 1 or decode_block < 1:
             raise ValueError("max_slots and decode_block must be >= 1")
-        self.params = params
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 (or None)")
         self.cfg = cfg
         self.max_slots = max_slots
         self.n_max = n_max
         self.decode_block = decode_block
+        self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
         dtype = jnp.dtype(cache_dtype or cfg.dtype)
-        self.caches = slots_mod.init_slot_caches(cfg, max_slots, n_max, dtype)
+        self._cache_dtype = dtype
+        if mesh is not None:
+            from repro.distributed import api as dist  # noqa: PLC0415
+            from repro.distributed.sharding import (  # noqa: PLC0415
+                named_shardings,
+                param_specs,
+            )
+
+            self.rules = rules if rules is not None else dist.rules_for_mesh(mesh)
+            pshapes = jax.eval_shape(lambda: params)
+            pspecs = param_specs(pshapes, mesh, self.rules)
+            self.params = jax.device_put(params, named_shardings(pspecs, mesh))
+            self._cache_ns = slots_mod.slot_cache_shardings(
+                cfg, max_slots, n_max, mesh, self.rules, dtype
+            )
+            (self._write_slot, self._clear_slot, self._read_slot) = (
+                slots_mod.make_sharded_slot_ops(self._cache_ns)
+            )
+            with self._device_ctx():
+                self.caches = slots_mod.init_slot_caches(
+                    cfg, max_slots, n_max, dtype, mesh=mesh, rules=self.rules
+                )
+        else:
+            self.rules = None
+            self.params = params
+            self._cache_ns = None
+            self._write_slot = slots_mod.write_slot
+            self._clear_slot = slots_mod.clear_slot
+            self._read_slot = slots_mod.read_slot
+            self.caches = slots_mod.init_slot_caches(cfg, max_slots, n_max, dtype)
+        self._scan_cache: Dict[tuple, Any] = {}
+        self._partial: Optional[_PartialPrefill] = None
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._rid = itertools.count()
         self._queue: deque = deque()
@@ -144,6 +223,67 @@ class ServeEngine:
         self._temp = np.zeros((max_slots,), np.float32)
         self._topk = np.zeros((max_slots,), np.int32)
         self._eos = np.full((max_slots,), -1, np.int32)
+
+    # -- mesh helpers -------------------------------------------------------
+
+    @contextlib.contextmanager
+    def _device_ctx(self):
+        """Mesh + sharding-rules context for every device dispatch (no-op on
+        the single-device engine).  Tracing happens inside it, so the model
+        layer's logical ``constrain`` annotations resolve."""
+        if self.mesh is None:
+            yield
+        else:
+            from repro.distributed import api as dist  # noqa: PLC0415
+
+            with self.mesh:
+                with dist.sharding_rules(self.mesh, self.rules):
+                    yield
+
+    def _decode_scan_fn(self, steps: int, sampling: bool, max_top_k: int):
+        """Per-engine compiled decode_scan variants (the sharded builds pin
+        this engine's cache shardings, so the global lru cache of
+        ``engine.decode_scan`` cannot be shared)."""
+        if self.mesh is None:
+            return engine_mod._jitted_decode_scan(
+                self.cfg, steps, sampling, max_top_k
+            )
+        key = (steps, sampling, max_top_k)
+        fn = self._scan_cache.get(key)
+        if fn is None:
+            fn = engine_mod.build_decode_scan(
+                self.cfg, steps, sampling, max_top_k,
+                cache_shardings=self._cache_ns,
+            )
+            self._scan_cache[key] = fn
+        return fn
+
+    def _prefill_chunk_fn(self):
+        """The chunked-prefill dispatch: the global jit off-mesh; on a mesh
+        a per-engine variant with the batch-1 cache output PINNED (same
+        donation argument as the slot ops — an unpinned chunk would let
+        the partitioner re-lay-out the carried cache every chunk)."""
+        if self.mesh is None:
+            return _jitted_prefill_chunk(self.cfg)
+        fn = self._scan_cache.get("prefill_chunk")
+        if fn is None:
+            from jax.sharding import (  # noqa: PLC0415
+                NamedSharding, PartitionSpec,
+            )
+
+            from repro.models.lm import lm_prefill_chunk  # noqa: PLC0415
+
+            partial_ns = slots_mod.slot_cache_shardings(
+                self.cfg, 1, self.n_max, self.mesh, self.rules,
+                self._cache_dtype,
+            )
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            fn = jax.jit(
+                functools.partial(lm_prefill_chunk, cfg=self.cfg),
+                donate_argnums=(2,), out_shardings=(rep, partial_ns),
+            )
+            self._scan_cache["prefill_chunk"] = fn
+        return fn
 
     # -- submission ---------------------------------------------------------
 
@@ -188,9 +328,64 @@ class ServeEngine:
 
     def _active_mask(self) -> np.ndarray:
         return np.array(
-            [s.rid is not None and not s.done and s.remaining > 0
-             for s in self._slots], bool,
+            [s.rid is not None and not s.done and not s.prefilling
+             and s.remaining > 0 for s in self._slots], bool,
         )
+
+    def _install(self, slot: int, rid: int, req: Request, req_caches,
+                 first: int, prompt_len: int) -> None:
+        """Splice a fully-prefilled request into ``slot`` and arm it."""
+        with self._device_ctx():
+            self.caches = self._write_slot(
+                self.caches, req_caches, jnp.asarray(slot, jnp.int32)
+            )
+        st = self._slots[slot]
+        st.rid, st.out, st.done, st.prefilling = rid, [first], False, False
+        st.remaining = req.max_new_tokens - 1
+        self._token[slot] = first
+        self._pos[slot] = prompt_len
+        self._temp[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+        if req.eos_id is not None and first == req.eos_id:
+            st.done = True
+
+    def _needs_chunked_prefill(self, req: Request) -> bool:
+        return (
+            self.prefill_chunk is not None
+            and self.cfg.family == "lm"
+            and not req.extras
+            and np.asarray(req.tokens).shape[-1] > self.prefill_chunk
+        )
+
+    def _advance_partial(self) -> None:
+        """Feed ONE more prompt chunk of the in-progress chunked admission;
+        finalize (sample first token + write_slot) when the prompt is
+        fully absorbed."""
+        p = self._partial
+        req = self._requests[p.rid]
+        toks = np.asarray(req.tokens)
+        n = int(toks.shape[-1])
+        take = min(self.prefill_chunk, n - p.consumed)
+        chunk = jnp.asarray(toks[None, p.consumed : p.consumed + take],
+                            jnp.int32)
+        with self._device_ctx():
+            p.logits, p.caches = self._prefill_chunk_fn()(
+                self.params, chunk, p.caches,
+                jnp.asarray(p.consumed, jnp.int32),
+            )
+        p.consumed += take
+        if p.consumed < n:
+            return
+        self._rng, sub = jax.random.split(self._rng)
+        first = int(np.asarray(sample_tokens(
+            p.logits, sub,
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+            max_top_k=req.top_k,
+        ))[0])
+        self._install(p.slot, p.rid, req, p.caches, first, n)
+        self._partial = None
 
     def _admit(self) -> None:
         """Prefill queued requests into free slots (between decode blocks).
@@ -199,9 +394,35 @@ class ServeEngine:
         batched prefill dispatch (their per-request caches are sliced out
         with ``read_slot`` and spliced into slots), so a burst of
         same-shape requests — e.g. everything ``generate`` submits — pays
-        one prefill, not one per request."""
+        one prefill, not one per request.
+
+        With ``prefill_chunk`` set, a long prompt at the head of the queue
+        is instead admitted CHUNK BY CHUNK: its slot is reserved, one
+        chunk is prefilled per engine step, and the decode blocks of the
+        other slots run in between — head-of-line admission stays FIFO but
+        no longer monopolises the device for the whole prompt."""
+        # Advance an in-progress chunked admission by exactly one chunk.
+        if self._partial is not None:
+            self._advance_partial()
         free = self._free_slots()
-        while free and self._queue:
+        while free and self._queue and self._partial is None:
+            head = self._requests[self._queue[0]]
+            if self._needs_chunked_prefill(head):
+                rid = self._queue.popleft()
+                slot = free.pop(0)
+                st = self._slots[slot]
+                st.rid, st.prefilling, st.done = rid, True, False
+                st.remaining, st.out = 0, []
+                with self._device_ctx():
+                    partial_caches = slots_mod.init_slot_caches(
+                        self.cfg, 1, self.n_max, self._cache_dtype,
+                        mesh=self.mesh, rules=self.rules,
+                    )
+                self._partial = _PartialPrefill(
+                    rid=rid, slot=slot, caches=partial_caches,
+                )
+                self._advance_partial()  # first chunk this step
+                continue  # FIFO: later requests wait behind the long prompt
             # Longest FIFO run of equal-prompt-length requests that fits
             # the free slots (extras shapes are uniform per config —
             # enforced at submit).
@@ -210,6 +431,9 @@ class ServeEngine:
             while (
                 len(group) < len(free)
                 and self._queue
+                and not self._needs_chunked_prefill(
+                    self._requests[self._queue[0]]
+                )
                 and np.asarray(
                     self._requests[self._queue[0]].tokens
                 ).shape[-1] == glen
@@ -223,9 +447,10 @@ class ServeEngine:
                 batch[k] = jnp.asarray(
                     np.concatenate([np.asarray(r.extras[k]) for r in reqs])
                 )
-            logits, pref_caches = _jitted_prefill(self.cfg, self.n_max)(
-                self.params, batch
-            )
+            with self._device_ctx():
+                logits, pref_caches = _jitted_prefill(self.cfg, self.n_max)(
+                    self.params, batch
+                )
             self._rng, sub = jax.random.split(self._rng)
             temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
             topks = jnp.asarray([r.top_k for r in reqs], jnp.int32)
@@ -235,35 +460,26 @@ class ServeEngine:
             ))
             for j, (rid, req) in enumerate(zip(group, reqs)):
                 slot = free.pop(0)
-                req_caches = (
-                    pref_caches if len(group) == 1
-                    else read_slot(pref_caches, jnp.asarray(j, jnp.int32))
-                )
-                self.caches = slots_mod.write_slot(
-                    self.caches, req_caches, jnp.asarray(slot, jnp.int32)
-                )
-                first = int(firsts[j])
-                st = self._slots[slot]
-                st.rid, st.out, st.done = rid, [first], False
-                st.remaining = req.max_new_tokens - 1
-                self._token[slot] = first
-                self._pos[slot] = glen
-                self._temp[slot] = req.temperature
-                self._topk[slot] = req.top_k
-                self._eos[slot] = -1 if req.eos_id is None else req.eos_id
-                if req.eos_id is not None and first == req.eos_id:
-                    st.done = True
+                with self._device_ctx():
+                    req_caches = (
+                        pref_caches if len(group) == 1
+                        else self._read_slot(pref_caches, jnp.asarray(j, jnp.int32))
+                    )
+                self._install(slot, rid, req, req_caches, int(firsts[j]), glen)
 
     def _retire_finished(self) -> None:
         for i, st in enumerate(self._slots):
+            if st.prefilling:
+                continue  # reserved for an in-progress chunked admission
             if st.rid is not None and (st.done or st.remaining <= 0):
                 self._outputs[st.rid] = np.asarray(st.out, np.int32)
                 # drop the Request (prompt + extras) — a long-lived engine
                 # must not accumulate every prompt it ever served
                 self._requests.pop(st.rid, None)
-                self.caches = slots_mod.clear_slot(
-                    self.caches, jnp.asarray(i, jnp.int32)
-                )
+                with self._device_ctx():
+                    self.caches = self._clear_slot(
+                        self.caches, jnp.asarray(i, jnp.int32)
+                    )
                 self._slots[i] = _Slot()
 
     # -- decoding -----------------------------------------------------------
@@ -286,7 +502,7 @@ class ServeEngine:
         steps = min(
             self.decode_block,
             max(s.remaining for s in self._slots
-                if s.rid is not None and not s.done),
+                if s.rid is not None and not s.done and not s.prefilling),
         )
         # steps and max_top_k are static jit keys: bucket both to powers of
         # two so the number of compiled full-model scan variants stays
@@ -297,26 +513,25 @@ class ServeEngine:
         # Static specialization for the compiled scan: all-greedy batches
         # (the common case) skip sampling entirely, and top-k is bounded
         # by the largest k among occupied slots.
-        occupied = [i for i, s in enumerate(self._slots) if s.rid is not None]
+        occupied = [i for i, s in enumerate(self._slots)
+                    if s.rid is not None and not s.prefilling]
         sampling = any(self._temp[i] > 0 for i in occupied)
         max_top_k = int(max((self._topk[i] for i in occupied), default=0))
         max_top_k = _next_pow2(max_top_k) if max_top_k > 0 else 0
         self._rng, sub = jax.random.split(self._rng)
-        (self.caches, token, pos, dev_active, _, toks, mask) = decode_scan(
-            self.params,
-            self.caches,
-            jnp.asarray(self._token),
-            jnp.asarray(self._pos),
-            jnp.asarray(active),
-            jnp.asarray(self._temp),
-            jnp.asarray(self._topk),
-            jnp.asarray(self._eos),
-            sub,
-            self.cfg,
-            int(steps),
-            sampling=sampling,
-            max_top_k=max_top_k,
-        )
+        scan_fn = self._decode_scan_fn(int(steps), bool(sampling), max_top_k)
+        with self._device_ctx():
+            (self.caches, token, pos, dev_active, _, toks, mask) = scan_fn(
+                self.params,
+                self.caches,
+                jnp.asarray(self._token),
+                jnp.asarray(self._pos),
+                jnp.asarray(active),
+                jnp.asarray(self._temp),
+                jnp.asarray(self._topk),
+                jnp.asarray(self._eos),
+                sub,
+            )
         toks = np.asarray(toks)
         mask = np.asarray(mask)
         # np.array (copy): np.asarray of a jax array is a read-only view,
@@ -325,7 +540,7 @@ class ServeEngine:
         self._pos = np.array(pos, np.int32)
         dev_active = np.asarray(dev_active)
         for i, st in enumerate(self._slots):
-            if st.rid is None or st.done:
+            if st.rid is None or st.done or st.prefilling:
                 continue
             for t in range(toks.shape[0]):
                 if not mask[t, i] or st.remaining <= 0:

@@ -40,9 +40,10 @@ TAIL_SLOT_AXIS = 0
 
 
 def init_slot_caches(
-    cfg: ModelConfig, max_slots: int, n_max: int, dtype=jnp.bfloat16
+    cfg: ModelConfig, max_slots: int, n_max: int, dtype=jnp.bfloat16,
+    mesh=None, rules=None,
 ) -> Dict[str, Any]:
-    """Zero-initialised slotted decode cache.
+    """Zero-initialised slotted decode cache (optionally mesh-sharded).
 
     Args:
       cfg: model config (attention backend picks taylor-state vs KV leaves).
@@ -50,6 +51,12 @@ def init_slot_caches(
       n_max: per-slot KV capacity in tokens (softmax backend only; the
         taylor moment state does not depend on it).
       dtype: KV-cache dtype.
+      mesh: optional ``jax.sharding.Mesh`` — the cache is allocated
+        directly onto it with the per-backend layout of
+        ``distributed.sharding.slot_cache_specs`` (slot axis over "dp",
+        heads — or d_v under MQA — over "tp").  None = single-device.
+      rules: logical→physical axis rules (defaults to
+        ``rules_for_mesh(mesh)``).
 
     Returns:
       The ``{"group", "tail", "kv_src"}`` cache pytree with ``max_slots``
@@ -60,7 +67,46 @@ def init_slot_caches(
     # (e.g. a forced Pallas impl outside its envelope) is a config error,
     # not something to discover mid-decode inside a jit.
     resolve_backend(cfg)
-    return lm_init_caches(cfg, max_slots, n_max, dtype)
+    if mesh is None:
+        return lm_init_caches(cfg, max_slots, n_max, dtype)
+    ns = slot_cache_shardings(cfg, max_slots, n_max, mesh, rules, dtype)
+    return jax.jit(
+        functools.partial(lm_init_caches, cfg, max_slots, n_max, dtype),
+        out_shardings=ns,
+    )()
+
+
+def slot_cache_shardings(
+    cfg: ModelConfig, max_slots: int, n_max: int, mesh, rules=None,
+    dtype=jnp.bfloat16,
+):
+    """``NamedSharding`` pytree for the slotted cache on ``mesh``.
+
+    Thin wrapper binding ``distributed.sharding.slot_cache_specs`` (the
+    per-backend ``state_kind`` layout rules) to a concrete mesh; the serve
+    engine pins these as ``out_shardings`` on every cache-producing
+    dispatch so buffer donation never re-lays-out the cache.
+
+    Args:
+      cfg: model config.
+      max_slots: slot count.
+      n_max: per-slot KV capacity.
+      mesh: target mesh.
+      rules: logical→physical axis rules (default ``rules_for_mesh``).
+      dtype: cache dtype (shapes only).
+
+    Returns:
+      Pytree of ``NamedSharding`` congruent to the cache pytree.
+    """
+    from repro.distributed import api as dist  # noqa: PLC0415
+    from repro.distributed.sharding import (  # noqa: PLC0415
+        named_shardings,
+        slot_cache_specs,
+    )
+
+    rules = rules if rules is not None else dist.rules_for_mesh(mesh)
+    specs = slot_cache_specs(cfg, max_slots, n_max, mesh, rules, dtype)
+    return named_shardings(specs, mesh)
 
 
 def slot_state_kinds(cfg: ModelConfig) -> Dict[str, str]:
@@ -92,22 +138,7 @@ def _splice(full: Array, one: Array, slot: Array, axis: int) -> Array:
     )
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def write_slot(caches, request_caches, slot: Array):
-    """Splice a batch-1 request cache (from prefill) into slot ``slot``.
-
-    Args:
-      caches: the live slotted cache pytree (donated — updated in place).
-      request_caches: a batch-1 cache pytree with the same structure, as
-        returned by ``lm_prefill`` for a single request.  For the taylor
-        backend this carries the final chunk-scan moment state
-        (``return_state=True`` handoff); for softmax, the prompt's KV.
-      slot: int32 scalar slot index (traced — one compilation serves all
-        slots).
-
-    Returns:
-      The updated cache pytree; every other slot is bit-identical.
-    """
+def _write_slot_impl(caches, request_caches, slot: Array):
     out = dict(caches)
     out["group"] = jax.tree.map(
         lambda f, o: _splice(f, o, slot, GROUP_SLOT_AXIS),
@@ -124,21 +155,7 @@ def write_slot(caches, request_caches, slot: Array):
     return out
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def clear_slot(caches, slot: Array):
-    """Zero one slot's state (eviction hygiene).
-
-    Functionally optional — ``write_slot`` fully overwrites a slot on
-    re-admission — but keeps evicted long-context moment state from
-    lingering in memory dumps and makes slot-reuse tests strict.
-
-    Args:
-      caches: the live slotted cache pytree (donated).
-      slot: int32 scalar slot index.
-
-    Returns:
-      The cache pytree with slot ``slot`` zeroed.
-    """
+def _clear_slot_impl(caches, slot: Array):
     def zero(f: Array, axis: int) -> Array:
         shape = list(f.shape)
         shape[axis] = 1
@@ -156,18 +173,7 @@ def clear_slot(caches, slot: Array):
     return out
 
 
-@jax.jit
-def read_slot(caches, slot: Array):
-    """Extract one slot as a batch-1 cache pytree (tests / debugging).
-
-    Args:
-      caches: the live slotted cache pytree.
-      slot: int32 scalar slot index.
-
-    Returns:
-      A batch-1 cache pytree with the same structure ``lm_prefill``
-      produces for a single request.
-    """
+def _read_slot_impl(caches, slot: Array):
     out = dict(caches)
     out["group"] = jax.tree.map(
         lambda f: jax.lax.dynamic_slice_in_dim(f, slot, 1, GROUP_SLOT_AXIS),
@@ -182,6 +188,87 @@ def read_slot(caches, slot: Array):
             caches["kv_src"], slot, 1, TAIL_SLOT_AXIS
         )
     return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slot(caches, request_caches, slot: Array):
+    """Splice a batch-1 request cache (from prefill) into slot ``slot``.
+
+    Args:
+      caches: the live slotted cache pytree (donated — updated in place).
+      request_caches: a batch-1 cache pytree with the same structure, as
+        returned by ``lm_prefill`` for a single request.  For the taylor
+        backend this carries the final chunk-scan moment state
+        (``return_state=True`` handoff); for softmax, the prompt's KV.
+      slot: int32 scalar slot index (traced — one compilation serves all
+        slots).
+
+    Returns:
+      The updated cache pytree; every other slot is bit-identical.
+    """
+    return _write_slot_impl(caches, request_caches, slot)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def clear_slot(caches, slot: Array):
+    """Zero one slot's state (eviction hygiene).
+
+    Functionally optional — ``write_slot`` fully overwrites a slot on
+    re-admission — but keeps evicted long-context moment state from
+    lingering in memory dumps and makes slot-reuse tests strict.
+
+    Args:
+      caches: the live slotted cache pytree (donated).
+      slot: int32 scalar slot index.
+
+    Returns:
+      The cache pytree with slot ``slot`` zeroed.
+    """
+    return _clear_slot_impl(caches, slot)
+
+
+@jax.jit
+def read_slot(caches, slot: Array):
+    """Extract one slot as a batch-1 cache pytree (tests / admission).
+
+    Args:
+      caches: the live slotted cache pytree.
+      slot: int32 scalar slot index.
+
+    Returns:
+      A batch-1 cache pytree with the same structure ``lm_prefill``
+      produces for a single request.
+    """
+    return _read_slot_impl(caches, slot)
+
+
+def make_sharded_slot_ops(cache_shardings):
+    """Mesh variants of (``write_slot``, ``clear_slot``, ``read_slot``).
+
+    The write/clear outputs are pinned to ``cache_shardings`` so the
+    donated input buffer is reused in place — without the pin the SPMD
+    partitioner is free to pick a different layout for the output, which
+    silently turns donation into a full reallocation + reshard of the
+    multi-GB slot cache on every admission.
+
+    Args:
+      cache_shardings: ``NamedSharding`` pytree for the slotted cache
+        (``slot_cache_shardings``).
+
+    Returns:
+      ``(write_slot_fn, clear_slot_fn, read_slot_fn)`` jitted callables
+      with the same signatures as the module-level single-device ops.
+    """
+    write = jax.jit(
+        _write_slot_impl, donate_argnums=(0,), out_shardings=cache_shardings
+    )
+    clear = jax.jit(
+        _clear_slot_impl, donate_argnums=(0,), out_shardings=cache_shardings
+    )
+    # read returns a batch-1 pytree (slot axis length 1): shardings derive
+    # from the input; no pin needed (nothing is donated).
+    read = jax.jit(_read_slot_impl)
+    return write, clear, read
 
 
 def slot_bytes(caches, max_slots: int) -> int:

@@ -1,0 +1,255 @@
+"""Mesh-sharded serving: token parity, late admission, chunked prefill.
+
+The sharded ``ServeEngine`` (tensor-parallel weights via ``param_specs``,
+slot axis data-sharded via ``slot_cache_specs``) must be a pure execution
+detail: greedy decode output on any mesh is token-identical to the
+single-device engine, and chunked prefill matches whole-prompt prefill
+logits to fp32 tolerance.  Multi-device tests spawn a fresh python with
+``--xla_force_host_platform_device_count=8`` (same pattern as
+tests/test_distributed.py) so this process keeps seeing 1 device.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.models.lm import lm_prefill
+from repro.serve import Request, ServeEngine, generate_loop, prefill_chunked
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_subprocess(code: str) -> str:
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(_REPO / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(_REPO),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (single device; the contract the sharded path reuses)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["taylor", "softmax"])
+def test_chunked_prefill_matches_whole_prefill(backend, rng):
+    """prefill_chunked == lm_prefill: last-token logits AND every cache
+    leaf, for a prompt that is not a chunk multiple."""
+    cfg = get_reduced("qwen2-1.5b").replace(attention=backend)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 37)), jnp.int32)
+    logits_whole, caches_whole = lm_prefill(params, {"tokens": toks}, cfg, n_max=64)
+    logits_chunk, caches_chunk = prefill_chunked(
+        params, {"tokens": toks}, cfg, n_max=64, chunk=16
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_whole), np.asarray(logits_chunk), atol=2e-3, rtol=2e-3
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(caches_whole),
+        jax.tree_util.tree_leaves(caches_chunk),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-3, rtol=2e-3,
+        )
+
+
+def test_chunked_prefill_matches_on_ssm_hybrid(rng):
+    """The mamba (SSD) block kind rides the chunked-prefill path through
+    its token recurrence — the hybrid arch must match whole prefill too."""
+    cfg = get_reduced("mamba2-780m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 29)), jnp.int32)
+    logits_whole, _ = lm_prefill(params, {"tokens": toks}, cfg, n_max=48)
+    logits_chunk, _ = prefill_chunked(
+        params, {"tokens": toks}, cfg, n_max=48, chunk=8
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_whole), np.asarray(logits_chunk), atol=2e-3, rtol=2e-3
+    )
+
+
+def test_prefill_chunked_rejects_source_families():
+    """vlm/encdec prompts carry source extras whole-prompt prefill must
+    build; the chunked path refuses instead of silently dropping them."""
+    cfg = get_reduced("llama-3.2-vision-11b")
+    with pytest.raises(ValueError, match="decoder-only"):
+        prefill_chunked(None, {"tokens": jnp.zeros((1, 8), jnp.int32)},
+                        cfg, n_max=32, chunk=4)
+
+
+def test_engine_chunked_admission_matches_solo(rng):
+    """A long prompt admitted chunk-by-chunk (interleaved with the decode
+    blocks of busy slots) still reproduces its solo-run tokens, and the
+    busy slots are unaffected."""
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    p_busy = np.asarray(rng.integers(0, cfg.vocab, (2, 12)), np.int32)
+    p_long = np.asarray(rng.integers(0, cfg.vocab, (33,)), np.int32)
+    solo = {}
+    for name, p, steps in (("b0", p_busy[0], 10), ("b1", p_busy[1], 10),
+                           ("long", p_long, 6)):
+        solo[name] = np.asarray(generate_loop(
+            params, {"tokens": jnp.asarray(p)[None]}, cfg, steps=steps
+        ))[0]
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=2,
+                      prefill_chunk=8)
+    r0 = eng.submit(Request(tokens=p_busy[0], max_new_tokens=10))
+    r1 = eng.submit(Request(tokens=p_busy[1], max_new_tokens=10))
+    eng.step()  # both slots busy mid-flight
+    r_long = eng.submit(Request(tokens=p_long, max_new_tokens=6))
+    outs = eng.run()
+    np.testing.assert_array_equal(outs[r0], solo["b0"])
+    np.testing.assert_array_equal(outs[r1], solo["b1"])
+    np.testing.assert_array_equal(outs[r_long], solo["long"])
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded engine (subprocess: 8 host CPU devices)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_engine_token_parity_with_late_admission():
+    """On 1×N / N×1 / 2×2 host-CPU meshes the sharded engine emits
+    token-identical greedy output to the single-device engine for
+    mixed-length prompts with mid-flight (late) admission, including a
+    chunk-prefilled long-prompt admission."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.configs import get_reduced
+        from repro.models import lm_init
+        from repro.serve import Request, ServeEngine
+        from repro.launch.mesh import make_serve_mesh
+
+        rng = np.random.default_rng(0)
+        cfg = get_reduced("qwen2-1.5b")  # taylor backend, GQA kv=2
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        prompts = [np.asarray(rng.integers(0, cfg.vocab, (n,)), np.int32)
+                   for n in (16, 9, 21, 33)]
+        budgets = (6, 9, 4, 5)
+
+        def run_engine(mesh, prefill_chunk=None):
+            eng = ServeEngine(params, cfg, max_slots=2, n_max=64,
+                              decode_block=3, mesh=mesh,
+                              prefill_chunk=prefill_chunk)
+            rids = [eng.submit(Request(tokens=p, max_new_tokens=b))
+                    for p, b in zip(prompts[:2], budgets[:2])]
+            eng.step()  # both slots mid-flight
+            rids += [eng.submit(Request(tokens=p, max_new_tokens=b))
+                     for p, b in zip(prompts[2:], budgets[2:])]  # late admits
+            outs = eng.run()
+            return [outs[r].tolist() for r in rids]
+
+        ref = run_engine(None)
+        results = {}
+        for shape in ((1, 4), (4, 1), (2, 2)):
+            results["x".join(map(str, shape))] = (
+                run_engine(make_serve_mesh(*shape)) == ref
+            )
+        # chunked long-prompt admission under TP sharding
+        results["1x4_chunked"] = (
+            run_engine(make_serve_mesh(1, 4), prefill_chunk=8) == ref
+        )
+        print(json.dumps(results))
+    """)
+    data = json.loads(out.strip().splitlines()[-1])
+    assert all(data.values()), data
+
+
+def test_sharded_engine_mqa_moment_state_dv_fallback():
+    """MQA (1 kv head): the head axis cannot shard, so slot_cache_specs
+    falls back to sharding the Taylor value moments over d_v — decode must
+    still be token-identical to single-device."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.models import lm_init
+        from repro.serve import Request, ServeEngine
+        from repro.launch.mesh import make_serve_mesh
+        from repro.distributed import api as dist
+        from repro.distributed.sharding import slot_cache_specs
+
+        rng = np.random.default_rng(1)
+        cfg = get_reduced("granite-20b")  # taylor backend, MQA kv=1
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        mesh = make_serve_mesh(2, 4)
+        rules = dist.rules_for_mesh(mesh)
+        specs = slot_cache_specs(cfg, 4, 64, mesh, rules)
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        # at least one moment leaf sharded over the slot axis AND one over
+        # the model axis via the d_v fallback (kv=1 cannot shard heads)
+        assert any("data" in tuple(s) for s in leaves), leaves
+        assert any(tuple(s) and tuple(s)[-1] == "model" for s in leaves), leaves
+
+        prompts = [np.asarray(rng.integers(0, cfg.vocab, (n,)), np.int32)
+                   for n in (10, 17, 8)]
+
+        def run_engine(mesh):
+            eng = ServeEngine(params, cfg, max_slots=4, n_max=64,
+                              decode_block=4, mesh=mesh)
+            rids = [eng.submit(Request(tokens=p, max_new_tokens=5))
+                    for p in prompts]
+            outs = eng.run()
+            return [outs[r].tolist() for r in rids]
+
+        print(json.dumps(run_engine(None) == run_engine(mesh)))
+    """)
+    assert out.strip().splitlines()[-1] == "true", out
+
+
+def test_slot_cache_specs_cover_every_leaf():
+    """The spec tree is congruent to the cache pytree for every backend
+    family (taylor / softmax KV / ssm hybrid), and a 1×1 mesh resolves to
+    fully-replicated specs (the degenerate single-device case)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.api import SINGLE_POD_RULES
+    from repro.distributed.sharding import slot_cache_specs
+    from repro.models.lm import lm_init_caches
+
+    class FakeMesh:
+        def __init__(self, sizes):
+            self.shape = dict(sizes)
+            self.axis_names = tuple(sizes)
+
+    rules = dict(SINGLE_POD_RULES)
+    for arch, backend in (("qwen2-1.5b", "taylor"), ("qwen2-1.5b", "softmax"),
+                          ("mamba2-780m", None), ("whisper-medium", None)):
+        cfg = get_reduced(arch)
+        if backend:
+            cfg = cfg.replace(attention=backend)
+        mesh = FakeMesh({"data": 2, "model": 2})
+        specs = slot_cache_specs(cfg, 4, 32, mesh, rules)
+        caches = lm_init_caches(cfg, 4, 32)
+        is_p = lambda x: isinstance(x, P)
+        assert jax.tree_util.tree_structure(caches) == (
+            jax.tree_util.tree_structure(specs, is_leaf=is_p)
+        ), arch
+        # slot axis sharded on at least one leaf
+        flat = jax.tree_util.tree_leaves(specs, is_leaf=is_p)
+        assert any("data" in tuple(s) for s in flat), (arch, flat)
+        # indivisible mesh (max_slots=4, heads tiny): every axis drops —
+        # the divisibility-aware resolver never produces an invalid spec
+        odd = FakeMesh({"data": 7, "model": 13})
+        specs_odd = slot_cache_specs(cfg, 4, 32, odd, rules)
+        for s in jax.tree_util.tree_leaves(specs_odd, is_leaf=is_p):
+            assert all(e is None for e in tuple(s)), (arch, s)
