@@ -148,10 +148,38 @@ def render_serve_sharded() -> list:
     return out
 
 
+def render_resilience() -> list:
+    """Resilience rows: goodput under the standard fault trace vs the
+    fault-free baseline, acceptance booleans, recovery latency
+    (BENCH_resilience.json)."""
+    data = _load("BENCH_resilience.json")
+    rows = []
+    for key, label in (
+        ("resilience_clean", "fault-free baseline"),
+        ("resilience_faulted", "standard fault trace"),
+        ("resilience_faulted_2x2", "standard fault trace, 2×2 mesh"),
+    ):
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        rows.append((
+            label, f"`{key}`", d.get("goodput_tok_s", "—"),
+            d.get("goodput_ratio", "—"), d.get("ok_identical", "—"),
+            d.get("recovery_blocks", "—"),
+            d.get("quarantined", "—"), d.get("shed", "—"),
+        ))
+    return _table(
+        ["workload", "row", "goodput tok/s (CPU)", "ratio vs clean",
+         "OK identical", "recovery blocks", "quarantined", "shed"],
+        rows,
+    )
+
+
 RENDERERS = {
     "backend-impl": render_backend_impl,
     "serve-throughput": render_serve,
     "serve-sharded": render_serve_sharded,
+    "resilience": render_resilience,
 }
 
 

@@ -183,6 +183,31 @@ class AttentionBackend:
             "parallelism"
         )
 
+    def state_health(self, cache, cfg) -> Array:
+        """Per-row health of a decode state (serving corruption guard).
+
+        A cheap, jit-safe predicate the serve engine sweeps after decode
+        blocks: a row whose state went non-finite (NaN/Inf moments, KV, or
+        SSM state) poisons every future token of that slot, so the engine
+        quarantines it and re-prefills the request (docs/serving.md
+        §Failure semantics).  The base implementation checks finiteness of
+        every inexact leaf; backends with extra invariants (e.g. the KV
+        cache's ``length`` bounds) override and AND them in.  Must be
+        O(state size) with no data-dependent control flow — it runs under
+        ``jax.jit``/``vmap`` over the stacked block caches.
+
+        Args:
+          cache: decode state as built by ``init_cache`` (or a
+            cross-attention read state — same leaf layout).
+          cfg: model config.
+
+        Returns:
+          ``[b]`` bool — True where the row's state is usable.
+        """
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        return tree_slot_health(cache)
+
     # -- protocol: decode-state sharding (mesh serving) ----------------------
 
     def cache_pspec(self, cfg):

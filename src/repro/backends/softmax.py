@@ -79,6 +79,25 @@ class SoftmaxBackend(AttentionBackend):
     def decode_step(self, cache, q, k, v, cfg, pos):
         return _kv_decode_step(cache, q, k, v, pos)
 
+    def state_health(self, cache, cfg):
+        """KV-cache health: finite K/V entries AND a ``length`` within
+        ``[0, n_max]`` — an out-of-range length makes the masked softmax
+        read garbage (or nothing), which is a corruption even though the
+        int leaf can never be NaN.
+
+        Args:
+          cache: ``KVCache`` (``k/v [b, hk, n_max, ·]``, ``length [b]``).
+          cfg: model config.
+
+        Returns:
+          ``[b]`` bool — True where the row's cache is usable.
+        """
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        finite = tree_slot_health(cache)
+        n_max = cache.k.shape[2]
+        return finite & (cache.length >= 0) & (cache.length <= n_max)
+
     def init_cross_cache(self, cfg, batch, n_src, dtype):
         hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
         z = jnp.zeros((batch, hk, n_src, hd), dtype)

@@ -86,6 +86,22 @@ class SSMBackend(AttentionBackend):
             ssd=P("dp", "tp", None, None),
         )
 
+    def state_health(self, cache, cfg):
+        """SSD-state health: conv window and ``[b, H, P, N]`` recurrent
+        state finite.  SSD's decay keeps a healthy state bounded, so any
+        NaN/Inf here is injected or overflowed — quarantine either way.
+
+        Args:
+          cache: ``MambaCache`` (``conv``, ``ssd``).
+          cfg: model config.
+
+        Returns:
+          ``[b]`` bool — True where the row's state is usable.
+        """
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        return tree_slot_health(cache)
+
     def merge_state(self, a, b):
         raise NotImplementedError(
             "SSD states merge with decay weighting, not addition — use "

@@ -11,11 +11,39 @@ from __future__ import annotations
 from typing import NamedTuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import TaylorState
 
 Array = jax.Array
+
+
+def tree_slot_health(tree) -> Array:
+    """Per-batch-row finiteness of a decode-state pytree.
+
+    The generic building block of the backends' ``state_health`` hooks
+    (serving corruption guards — docs/serving.md §Failure semantics):
+    every inexact-dtype leaf is checked with ``jnp.isfinite`` reduced over
+    its non-batch axes; integer leaves (e.g. ``KVCache.length``) are
+    skipped — bounds on those are backend semantics, not finiteness.
+
+    Args:
+      tree: decode-state pytree whose array leaves share a leading batch
+        (serving-slot) axis.
+
+    Returns:
+      ``[b]`` bool — True where every leaf of that row is finite.
+    """
+    leaves = [l for l in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact)]
+    if not leaves:
+        return jnp.asarray(True)
+    ok = None
+    for l in leaves:
+        h = jnp.isfinite(l).reshape(l.shape[0], -1).all(axis=-1)
+        ok = h if ok is None else ok & h
+    return ok
 
 
 class KVCache(NamedTuple):

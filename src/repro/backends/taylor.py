@@ -205,6 +205,23 @@ class TaylorBackend(AttentionBackend):
             s2=s2 if second else None,
         )
 
+    def state_health(self, cache, cfg):
+        """Moment-state health: every moment finite AND the token-count
+        moment non-negative (``n0`` is a running count — a negative value
+        means the state was corrupted or merged wrongly, even if finite).
+
+        Args:
+          cache: ``TaylorState`` (``z2``/``s2`` None for order-1 configs).
+          cfg: model config.
+
+        Returns:
+          ``[b]`` bool — True where the row's moments are usable.
+        """
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        finite = tree_slot_health(cache)
+        return finite & (cache.n0 >= 0).all(axis=-1)
+
     def merge_state(self, a, b):
         return merge_states(a, b)
 

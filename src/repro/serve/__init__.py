@@ -5,6 +5,11 @@ optionally mesh-sharded (``mesh=``) and with chunked long-prompt
 admission (``prefill_chunk=``); see docs/serving.md.  ``generate`` is the
 batch-convenience wrapper; ``generate_loop`` keeps the original per-token
 dispatch loop as the parity/benchmark baseline.
+
+Resilience (docs/serving.md §Failure semantics): every request ends in a
+terminal ``Status`` carried by a ``RequestResult``; ``ResiliencePolicy``
+configures shedding/degradation/deadlines/retries; ``faults.FaultPlan``
+injects deterministic failures for tests and ``bench_resilience``.
 """
 
 from repro.serve.engine import (
@@ -16,20 +21,53 @@ from repro.serve.engine import (
     prefill_chunked,
     sample_tokens,
 )
-from repro.serve.scheduler import Request, ServeEngine
+from repro.serve.faults import (
+    DispatchFailure,
+    FaultPlan,
+    InjectedDispatchError,
+    InjectedFault,
+    PrefillStall,
+    QueueFlood,
+    SlotCorruption,
+    standard_trace,
+)
+from repro.serve.scheduler import (
+    QueueOverflow,
+    Request,
+    RequestRejected,
+    RequestResult,
+    ResiliencePolicy,
+    ServeEngine,
+    Status,
+)
 from repro.serve.slots import (
     clear_slot,
+    corrupt_slot,
     init_slot_caches,
     read_slot,
     slot_bytes,
     slot_cache_shardings,
+    slot_health,
     write_slot,
 )
 
 __all__ = [
+    "DispatchFailure",
+    "FaultPlan",
+    "InjectedDispatchError",
+    "InjectedFault",
+    "PrefillStall",
+    "QueueFlood",
+    "QueueOverflow",
     "Request",
+    "RequestRejected",
+    "RequestResult",
+    "ResiliencePolicy",
     "ServeEngine",
+    "SlotCorruption",
+    "Status",
     "clear_slot",
+    "corrupt_slot",
     "decode_scan",
     "decode_step",
     "generate",
@@ -41,5 +79,7 @@ __all__ = [
     "sample_tokens",
     "slot_bytes",
     "slot_cache_shardings",
+    "slot_health",
+    "standard_trace",
     "write_slot",
 ]

@@ -86,6 +86,16 @@ def _jitted_decode_step(cfg: ModelConfig):
 
 
 @functools.lru_cache(maxsize=32)
+def _jitted_slot_health(cfg: ModelConfig):
+    # One fused reduction over the whole slotted cache ([max_slots] bool).
+    # Read-only (nothing donated) so the same compilation serves the
+    # single-device and mesh engines — shardings derive from the input.
+    from repro.serve.slots import slot_health  # noqa: PLC0415 (cycle)
+
+    return jax.jit(functools.partial(slot_health, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=32)
 def _jitted_prefill_chunk(cfg: ModelConfig):
     # donate the caches: every chunk fully replaces them, and a long-prompt
     # admission would otherwise hold two copies of the KV leaves alive.

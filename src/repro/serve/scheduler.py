@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler: slot lifecycle + admission.
+"""Continuous-batching scheduler: slot lifecycle, admission & resilience.
 
 ``ServeEngine`` packs up to ``max_slots`` concurrent requests into one
 slot-indexed decode cache (``slots.py``) and advances all of them together
@@ -12,12 +12,24 @@ to the slot via ``return_state=True``) and splices the state in with
 Slot lifecycle (see DESIGN.md §Serving):
 
   FREE --admit(prefill+write_slot)--> ACTIVE --eos / budget--> RETIRED
-   ^                                                             |
-   +----------------------- clear_slot --------------------------+
+   ^                                    |                        |
+   |                         quarantine / deadline               |
+   +------------------------------ clear_slot -------------------+
 
 Per-token cost is independent of how requests arrive: a request admitted
 into a busy batch produces the same tokens as a solo run (tested), because
 slots never interact — every op in the decode step is batch-parallel.
+
+Failure semantics (docs/serving.md §Failure semantics): every submitted
+request ends in exactly one terminal ``Status`` — OK, DEGRADED,
+TIMED_OUT, FAILED or REJECTED — retrievable as a ``RequestResult`` via
+``run(return_results=True)``.  The ``ResiliencePolicy`` knobs control
+admission (bounded queue with shedding, overload degradation), deadlines
+and queue-TTL (enforced at decode-block boundaries), bounded
+retry-with-backoff after quarantine or dispatch loss, and the
+``state_health`` sweep that quarantines slots whose moment/KV/SSM state
+went non-finite without perturbing co-batched slots.  A seeded
+``serve.faults.FaultPlan`` exercises all of it deterministically.
 
 Two orthogonal extensions (docs/serving.md):
 
@@ -34,10 +46,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import enum
 import functools
 import itertools
-from collections import deque
-from typing import Any, Dict, List, Optional
+import time
+from collections import Counter, deque
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +63,122 @@ from repro.serve import slots as slots_mod
 from repro.serve.engine import (
     _jitted_prefill,
     _jitted_prefill_chunk,
+    _jitted_slot_health,
     sample_tokens,
 )
 
 Array = jax.Array
+
+
+class Status(enum.Enum):
+    """Terminal outcome of one request (the status lattice).
+
+    Every submitted request ends in exactly one of these:
+
+      * ``OK``        — full output produced (eos or budget).
+      * ``DEGRADED``  — full output, but produced under the overload
+        degradation policy (budget clamped / chunked prefill forced);
+        tokens are still exact for what was generated.
+      * ``TIMED_OUT`` — deadline or queue-TTL expired; ``tokens`` holds
+        the prefix accepted before expiry.
+      * ``FAILED``    — retries exhausted after quarantine/dispatch loss;
+        ``tokens`` holds the accepted prefix, ``error`` the last cause.
+      * ``REJECTED``  — refused at submit (validation or load shedding);
+        no tokens.
+    """
+
+    OK = "ok"
+    DEGRADED = "degraded"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Typed terminal outcome of one request.
+
+    Attributes:
+      status: terminal ``Status``.
+      tokens: new tokens produced (``[n] int32``; the accepted prefix for
+        TIMED_OUT/FAILED, empty for REJECTED).  Tokens of OK/DEGRADED
+        greedy requests are token-identical to a fault-free run (tested).
+      error: human-readable cause for non-successful statuses.
+      retries: number of re-prefill retries the request consumed.
+    """
+
+    status: Status
+    tokens: np.ndarray
+    error: Optional[str] = None
+    retries: int = 0
+
+
+class RequestRejected(ValueError):
+    """Typed submit-time rejection (validation or shedding).
+
+    Subclasses ``ValueError`` so pre-resilience callers that caught the
+    untyped validation errors keep working.
+
+    Attributes:
+      reason: machine-readable code (``empty_prompt``, ``bad_budget``,
+        ``prompt_too_long``, ``over_capacity``, ``bad_extras``,
+        ``queue_full``).
+      rid: request id under which the engine recorded the ``REJECTED``
+        ``RequestResult`` (for terminal-status audits).
+    """
+
+    def __init__(self, message: str, reason: str, rid: Optional[int] = None):
+        super().__init__(message)
+        self.reason = reason
+        self.rid = rid
+
+
+class QueueOverflow(RequestRejected):
+    """Raised by ``submit`` when the bounded queue sheds the request
+    (``ResiliencePolicy.max_queue`` reached)."""
+
+    def __init__(self, message: str, rid: Optional[int] = None):
+        super().__init__(message, reason="queue_full", rid=rid)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    """Admission, deadline, and recovery knobs of the serve engine.
+
+    The defaults reproduce the pre-resilience engine exactly on a healthy
+    run (unbounded queue, no degradation) while keeping the health sweep
+    and bounded retries armed.
+
+    Attributes:
+      max_queue: bounded queue depth (queued + awaiting-retry); a submit
+        beyond it is shed with ``QueueOverflow``.  None = unbounded.
+      degrade_queue_depth: queue depth at or above which new submissions
+        are admitted DEGRADED.  None = never degrade.
+      degraded_max_new_tokens: budget clamp applied to degraded
+        submissions (None = no clamp).
+      degrade_prefill_chunk: per-request chunked-prefill size forced on
+        degraded submissions, so long overload prompts cannot monopolise
+        the device (None = engine default).
+      max_retries: re-prefill attempts per request after quarantine or
+        dispatch loss before it finalises FAILED.
+      retry_backoff_blocks: backoff base — retry ``r`` waits
+        ``retry_backoff_blocks * 2**(r-1)`` decode blocks before
+        re-entering the queue (at its front).
+      max_dispatch_retries: in-place re-dispatch attempts of one decode
+        block (safe only while the donated cache is still alive); past
+        them the engine rebuilds the cache and requeues live requests.
+      health_check_every: run the ``state_health`` sweep every N decode
+        blocks (0 disables sweeping).
+    """
+
+    max_queue: Optional[int] = None
+    degrade_queue_depth: Optional[int] = None
+    degraded_max_new_tokens: Optional[int] = None
+    degrade_prefill_chunk: Optional[int] = None
+    max_retries: int = 2
+    retry_backoff_blocks: int = 1
+    max_dispatch_retries: int = 2
+    health_check_every: int = 1
 
 
 @dataclasses.dataclass
@@ -70,6 +196,13 @@ class Request:
       extras: extra model inputs with a leading batch-1 axis, e.g.
         ``image_embeds [1, n_img, vision_dim]`` (vlm) or ``audio_frames``
         (encdec).
+      deadline: wall-clock budget in seconds (engine ``clock`` units) from
+        submit to completion; enforced at decode-block boundaries — an
+        expired request finalises TIMED_OUT with its accepted prefix.
+        None = no deadline.
+      queue_ttl: seconds the request may wait UNQUEUED work (queued or
+        awaiting retry) before it is expired TIMED_OUT without ever
+        decoding.  None = waits forever.
     """
 
     tokens: np.ndarray
@@ -78,6 +211,8 @@ class Request:
     top_k: int = 0
     eos_id: Optional[int] = None
     extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    deadline: Optional[float] = None
+    queue_ttl: Optional[float] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -94,6 +229,34 @@ class _Slot:
     done: bool = False            # emitted eos (device went inactive)
     prefilling: bool = False      # reserved for an in-progress chunked prefill
     out: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """Engine-side lifecycle record of one admitted request: the effective
+    (possibly degraded) budget, deadline/TTL timestamps, and the
+    retry-continuation state — ``accepted`` tokens survive a quarantine
+    and are replayed as prompt suffix on re-prefill, so a greedy retry
+    continues token-identically."""
+
+    req: Request
+    budget: int                       # post-degradation token budget
+    submitted_at: float
+    deadline_at: Optional[float]      # absolute; None = no deadline
+    ttl_at: Optional[float]           # absolute queue-TTL; None = none
+    degraded: bool = False
+    chunk: Optional[int] = None       # per-request prefill-chunk override
+    retries: int = 0
+    accepted: List[int] = dataclasses.field(default_factory=list)
+    not_before_block: int = 0         # retry backoff gate
+
+    def effective_tokens(self) -> np.ndarray:
+        toks = np.asarray(self.req.tokens).reshape(-1).astype(np.int32)
+        if self.accepted:
+            return np.concatenate(
+                [toks, np.asarray(self.accepted, np.int32)]
+            )
+        return toks
 
 
 @dataclasses.dataclass
@@ -117,11 +280,18 @@ class ServeEngine:
         eng = ServeEngine(params, cfg, max_slots=8, n_max=4096)
         rid = eng.submit(Request(tokens=prompt, max_new_tokens=64))
         outputs = eng.run()          # {rid: np.ndarray of new tokens}
+        results = eng.run(return_results=True)   # {rid: RequestResult}
 
     ``submit`` only enqueues; ``run`` (or repeated ``step``) drives
     admission and decoding until every request completes.  Prefill is
     jit-cached per (cfg, n_max) and re-traced per distinct prompt length —
     serve with bucketed prompt lengths if that matters.
+
+    Resilience: ``policy=`` bounds the queue, degrades under overload and
+    arms retry/quarantine; ``fault_plan=`` injects a seeded
+    ``serve.faults.FaultPlan`` at the engine's boundaries (tests /
+    ``benchmarks/bench_resilience.py``); ``stats()`` exposes the
+    counters.  See docs/serving.md §Failure semantics.
     """
 
     def __init__(
@@ -136,6 +306,9 @@ class ServeEngine:
         mesh=None,
         rules=None,
         prefill_chunk: Optional[int] = None,
+        policy: Optional[ResiliencePolicy] = None,
+        fault_plan=None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         """Builds the engine and allocates the slotted cache.
 
@@ -167,6 +340,12 @@ class ServeEngine:
             (decoder-only families; vlm/encdec fall back to whole-prompt
             prefill).  None = whole-prompt admission (the original
             behaviour).
+          policy: ``ResiliencePolicy`` (None = defaults: unbounded queue,
+            no degradation, health sweep every block, bounded retries).
+          fault_plan: optional ``serve.faults.FaultPlan`` consulted at
+            block boundaries (deterministic fault injection).
+          clock: monotonic-seconds source for deadlines/TTL (defaults to
+            ``time.monotonic``; tests inject counters).
         """
         if max_slots < 1 or decode_block < 1:
             raise ValueError("max_slots and decode_block must be >= 1")
@@ -177,6 +356,9 @@ class ServeEngine:
         self.n_max = n_max
         self.decode_block = decode_block
         self.prefill_chunk = prefill_chunk
+        self.policy = policy if policy is not None else ResiliencePolicy()
+        self.fault_plan = fault_plan
+        self._clock = clock if clock is not None else time.monotonic
         self.mesh = mesh
         dtype = jnp.dtype(cache_dtype or cfg.dtype)
         self._cache_dtype = dtype
@@ -209,14 +391,17 @@ class ServeEngine:
             self._clear_slot = slots_mod.clear_slot
             self._read_slot = slots_mod.read_slot
             self.caches = slots_mod.init_slot_caches(cfg, max_slots, n_max, dtype)
-        self._scan_cache: Dict[tuple, Any] = {}
+        self._scan_cache: Dict[Any, Any] = {}
         self._partial: Optional[_PartialPrefill] = None
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._rid = itertools.count()
         self._queue: deque = deque()
-        self._requests: Dict[int, Request] = {}
-        self._outputs: Dict[int, np.ndarray] = {}
+        self._retry: List[int] = []       # rids waiting out a backoff
+        self._requests: Dict[int, _Tracked] = {}
+        self._results: Dict[int, RequestResult] = {}
         self._slots = [_Slot() for _ in range(max_slots)]
+        self._block = 0                   # decode-block counter (1-based)
+        self._stats: Counter = Counter()
         # Per-slot device-facing vectors (host copies are authoritative).
         self._token = np.zeros((max_slots,), np.int32)
         self._pos = np.zeros((max_slots,), np.int32)
@@ -285,17 +470,109 @@ class ServeEngine:
             self._scan_cache["prefill_chunk"] = fn
         return fn
 
+    def _corrupt_fn(self):
+        """Fault-injection slot corruption (mesh variant pinned + donated,
+        same argument as the slot ops)."""
+        if self.mesh is None:
+            return slots_mod.corrupt_slot
+        fn = self._scan_cache.get("corrupt")
+        if fn is None:
+            fn = jax.jit(
+                slots_mod._corrupt_slot_impl,
+                donate_argnums=(0,), out_shardings=self._cache_ns,
+            )
+            self._scan_cache["corrupt"] = fn
+        return fn
+
     # -- submission ---------------------------------------------------------
 
+    def _queue_depth(self) -> int:
+        return len(self._queue) + len(self._retry)
+
     def submit(self, request: Request) -> int:
-        """Enqueue a request; returns its id (key into ``run``'s result)."""
-        prompt_len = int(np.asarray(request.tokens).shape[-1])
+        """Validate, admission-control and enqueue a request.
+
+        Returns the request id (key into ``run``'s result dict).  Invalid
+        requests raise ``RequestRejected`` (a ``ValueError``) with a typed
+        ``reason``; a full bounded queue sheds with ``QueueOverflow``.
+        Either way the engine records a terminal ``REJECTED``
+        ``RequestResult`` under ``exc.rid``.  Under overload
+        (``degrade_queue_depth``) the request is admitted DEGRADED:
+        budget clamped to ``degraded_max_new_tokens`` and chunked prefill
+        forced via ``degrade_prefill_chunk``.
+        """
+        rid = next(self._rid)
+        self._stats["submitted"] += 1
+        try:
+            self._validate(request)
+            if (self.policy.max_queue is not None
+                    and self._queue_depth() >= self.policy.max_queue):
+                self._stats["shed"] += 1
+                raise QueueOverflow(
+                    f"queue full ({self._queue_depth()} >= max_queue="
+                    f"{self.policy.max_queue}); request shed", rid=rid,
+                )
+        except RequestRejected as e:
+            self._stats["rejected"] += 1
+            self._results[rid] = RequestResult(
+                status=Status.REJECTED,
+                tokens=np.zeros((0,), np.int32),
+                error=str(e),
+            )
+            if e.rid is None:
+                e.rid = rid
+            raise
+        budget = request.max_new_tokens
+        degraded = False
+        chunk = None
+        if (self.policy.degrade_queue_depth is not None
+                and self._queue_depth() >= self.policy.degrade_queue_depth):
+            degraded = True
+            self._stats["degraded_admissions"] += 1
+            if self.policy.degraded_max_new_tokens is not None:
+                budget = min(budget, self.policy.degraded_max_new_tokens)
+            chunk = self.policy.degrade_prefill_chunk
+        now = self._clock()
+        self._requests[rid] = _Tracked(
+            req=request,
+            budget=budget,
+            submitted_at=now,
+            deadline_at=(None if request.deadline is None
+                         else now + request.deadline),
+            ttl_at=(None if request.queue_ttl is None
+                    else now + request.queue_ttl),
+            degraded=degraded,
+            chunk=chunk,
+        )
+        self._queue.append(rid)
+        return rid
+
+    def _validate(self, request: Request) -> None:
+        """Typed submit-time validation (raises ``RequestRejected``)."""
+        prompt_len = int(np.asarray(request.tokens).reshape(-1).shape[0])
+        if prompt_len < 1:
+            raise RequestRejected(
+                "prompt is empty (need at least one token)",
+                reason="empty_prompt",
+            )
         if request.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+            raise RequestRejected(
+                f"max_new_tokens must be >= 1, got {request.max_new_tokens}",
+                reason="bad_budget",
+            )
+        if prompt_len > self.n_max:
+            # Without this check the request is unadmittable and run()
+            # spins forever waiting for a slot that can never prefill it.
+            raise RequestRejected(
+                f"prompt ({prompt_len} tokens) exceeds the engine's n_max "
+                f"({self.n_max}); it can never be admitted",
+                reason="prompt_too_long",
+            )
         if prompt_len + request.max_new_tokens > self.n_max:
-            raise ValueError(
+            raise RequestRejected(
                 f"prompt ({prompt_len}) + max_new_tokens "
-                f"({request.max_new_tokens}) exceeds n_max ({self.n_max})"
+                f"({request.max_new_tokens}) exceeds n_max ({self.n_max})",
+                reason="over_capacity",
             )
         # The slot cache preallocates kv_src/cross-KV leaves at the config's
         # source length, so every request's extras must match it exactly —
@@ -310,16 +587,109 @@ class ServeEngine:
         for name, shape in expected.items():
             got = tuple(np.asarray(request.extras.get(name, ())).shape)
             if got != shape:
-                raise ValueError(
+                raise RequestRejected(
                     f"request extra {name!r} must have shape {shape} (the "
                     f"slot cache is preallocated from the config), got "
                     f"{got or 'missing'} — pad/resize the input to the "
-                    f"configured source length"
+                    f"configured source length",
+                    reason="bad_extras",
                 )
-        rid = next(self._rid)
-        self._requests[rid] = request
-        self._queue.append(rid)
-        return rid
+
+    # -- terminal outcomes --------------------------------------------------
+
+    def _finalize(self, rid: int, status: Status, tokens,
+                  error: Optional[str] = None) -> None:
+        """Record a request's terminal ``RequestResult`` and drop its
+        tracking state (prompt + extras must not accumulate)."""
+        tr = self._requests.pop(rid, None)
+        self._results[rid] = RequestResult(
+            status=status,
+            tokens=np.asarray(list(tokens), np.int32),
+            error=error,
+            retries=tr.retries if tr is not None else 0,
+        )
+        self._stats[status.value] += 1
+
+    def _success_status(self, tr: Optional[_Tracked]) -> Status:
+        return Status.DEGRADED if (tr is not None and tr.degraded) else Status.OK
+
+    def _release_slot(self, idx: int) -> None:
+        """Clear one slot's device state and free its host record."""
+        with self._device_ctx():
+            self.caches = self._clear_slot(
+                self.caches, jnp.asarray(idx, jnp.int32)
+            )
+        self._slots[idx] = _Slot()
+
+    def _requeue_for_retry(self, rid: int, accepted: List[int],
+                           error: str) -> None:
+        """Bounded retry-with-backoff after quarantine or dispatch loss.
+
+        The accepted tokens are kept: re-admission prefills prompt +
+        accepted and continues decoding from there, so a greedy retry is
+        token-identical to an uninterrupted run.  Retries exhausted →
+        FAILED with the accepted prefix."""
+        tr = self._requests.get(rid)
+        if tr is None:
+            return
+        if len(accepted) >= tr.budget:
+            # everything was already produced — the loss cost nothing
+            self._finalize(rid, self._success_status(tr), accepted)
+            return
+        if tr.retries >= self.policy.max_retries:
+            self._finalize(rid, Status.FAILED, accepted, error=error)
+            return
+        tr.retries += 1
+        self._stats["retries"] += 1
+        tr.accepted = list(accepted)
+        tr.not_before_block = self._block + (
+            self.policy.retry_backoff_blocks * (1 << (tr.retries - 1))
+        )
+        self._retry.append(rid)
+
+    def _release_retries(self) -> None:
+        """Move backoff-expired retries to the FRONT of the queue (they
+        were already admitted once — retries jump the line)."""
+        due = [rid for rid in self._retry
+               if self._requests[rid].not_before_block <= self._block]
+        if not due:
+            return
+        self._retry = [r for r in self._retry if r not in due]
+        for rid in reversed(due):
+            self._queue.appendleft(rid)
+
+    def _expire(self, now: float) -> None:
+        """Deadline / queue-TTL enforcement at a block boundary."""
+        for rid in [r for r in self._queue]:
+            tr = self._requests.get(rid)
+            if tr is None:
+                continue
+            if ((tr.ttl_at is not None and now >= tr.ttl_at)
+                    or (tr.deadline_at is not None and now >= tr.deadline_at)):
+                self._queue.remove(rid)
+                self._finalize(rid, Status.TIMED_OUT, tr.accepted,
+                               error="expired while queued")
+        for rid in list(self._retry):
+            tr = self._requests.get(rid)
+            if tr is None:
+                continue
+            if ((tr.ttl_at is not None and now >= tr.ttl_at)
+                    or (tr.deadline_at is not None and now >= tr.deadline_at)):
+                self._retry.remove(rid)
+                self._finalize(rid, Status.TIMED_OUT, tr.accepted,
+                               error="expired awaiting retry")
+        for i, st in enumerate(self._slots):
+            if st.rid is None:
+                continue
+            tr = self._requests.get(st.rid)
+            if tr is None or tr.deadline_at is None or now < tr.deadline_at:
+                continue
+            if st.prefilling:
+                if self._partial is not None and self._partial.rid == st.rid:
+                    self._partial = None
+            self._finalize(st.rid, Status.TIMED_OUT, st.out,
+                           error="deadline exceeded mid-decode")
+            self._release_slot(i)
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -332,16 +702,21 @@ class ServeEngine:
              and s.remaining > 0 for s in self._slots], bool,
         )
 
-    def _install(self, slot: int, rid: int, req: Request, req_caches,
+    def _install(self, slot: int, rid: int, tr: _Tracked, req_caches,
                  first: int, prompt_len: int) -> None:
-        """Splice a fully-prefilled request into ``slot`` and arm it."""
+        """Splice a fully-prefilled request into ``slot`` and arm it.
+
+        For a retry continuation, ``prompt_len`` covers prompt + accepted
+        tokens and the accepted prefix is replayed into the output."""
+        req = tr.req
         with self._device_ctx():
             self.caches = self._write_slot(
                 self.caches, req_caches, jnp.asarray(slot, jnp.int32)
             )
         st = self._slots[slot]
-        st.rid, st.out, st.done, st.prefilling = rid, [first], False, False
-        st.remaining = req.max_new_tokens - 1
+        st.rid, st.done, st.prefilling = rid, False, False
+        st.out = list(tr.accepted) + [first]
+        st.remaining = tr.budget - len(st.out)
         self._token[slot] = first
         self._pos[slot] = prompt_len
         self._temp[slot] = req.temperature
@@ -350,12 +725,16 @@ class ServeEngine:
         if req.eos_id is not None and first == req.eos_id:
             st.done = True
 
-    def _needs_chunked_prefill(self, req: Request) -> bool:
+    def _chunk_for(self, tr: _Tracked) -> Optional[int]:
+        return tr.chunk if tr.chunk is not None else self.prefill_chunk
+
+    def _needs_chunked_prefill(self, tr: _Tracked) -> bool:
+        chunk = self._chunk_for(tr)
         return (
-            self.prefill_chunk is not None
+            chunk is not None
             and self.cfg.family == "lm"
-            and not req.extras
-            and np.asarray(req.tokens).shape[-1] > self.prefill_chunk
+            and not tr.req.extras
+            and tr.effective_tokens().shape[-1] > chunk
         )
 
     def _advance_partial(self) -> None:
@@ -363,10 +742,11 @@ class ServeEngine:
         finalize (sample first token + write_slot) when the prompt is
         fully absorbed."""
         p = self._partial
-        req = self._requests[p.rid]
-        toks = np.asarray(req.tokens)
+        tr = self._requests[p.rid]
+        req = tr.req
+        toks = tr.effective_tokens()
         n = int(toks.shape[-1])
-        take = min(self.prefill_chunk, n - p.consumed)
+        take = min(self._chunk_for(tr), n - p.consumed)
         chunk = jnp.asarray(toks[None, p.consumed : p.consumed + take],
                             jnp.int32)
         with self._device_ctx():
@@ -384,7 +764,7 @@ class ServeEngine:
             jnp.asarray([req.top_k], jnp.int32),
             max_top_k=req.top_k,
         ))[0])
-        self._install(p.slot, p.rid, req, p.caches, first, n)
+        self._install(p.slot, p.rid, tr, p.caches, first, n)
         self._partial = None
 
     def _admit(self) -> None:
@@ -401,9 +781,14 @@ class ServeEngine:
         chunk is prefilled per engine step, and the decode blocks of the
         other slots run in between — head-of-line admission stays FIFO but
         no longer monopolises the device for the whole prompt."""
-        # Advance an in-progress chunked admission by exactly one chunk.
+        # Advance an in-progress chunked admission by exactly one chunk
+        # (unless the fault plan stalls it this step).
         if self._partial is not None:
-            self._advance_partial()
+            if (self.fault_plan is not None
+                    and self.fault_plan.prefill_stalled(self._block)):
+                self._stats["prefill_stalls"] += 1
+            else:
+                self._advance_partial()
         free = self._free_slots()
         while free and self._queue and self._partial is None:
             head = self._requests[self._queue[0]]
@@ -427,78 +812,216 @@ class ServeEngine:
             # the free slots (extras shapes are uniform per config —
             # enforced at submit).
             group = [self._queue.popleft()]
-            glen = np.asarray(self._requests[group[0]].tokens).shape[-1]
+            glen = self._requests[group[0]].effective_tokens().shape[-1]
             while (
                 len(group) < len(free)
                 and self._queue
                 and not self._needs_chunked_prefill(
                     self._requests[self._queue[0]]
                 )
-                and np.asarray(
-                    self._requests[self._queue[0]].tokens
+                and self._requests[self._queue[0]].effective_tokens(
                 ).shape[-1] == glen
             ):
                 group.append(self._queue.popleft())
-            reqs = [self._requests[rid] for rid in group]
+            trs = [self._requests[rid] for rid in group]
             batch = {"tokens": jnp.asarray(
-                np.stack([np.asarray(r.tokens) for r in reqs]), jnp.int32
+                np.stack([tr.effective_tokens() for tr in trs]), jnp.int32
             )}
-            for k in reqs[0].extras:
+            for k in trs[0].req.extras:
                 batch[k] = jnp.asarray(
-                    np.concatenate([np.asarray(r.extras[k]) for r in reqs])
+                    np.concatenate([np.asarray(tr.req.extras[k])
+                                    for tr in trs])
                 )
             with self._device_ctx():
                 logits, pref_caches = _jitted_prefill(self.cfg, self.n_max)(
                     self.params, batch
                 )
             self._rng, sub = jax.random.split(self._rng)
-            temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
-            topks = jnp.asarray([r.top_k for r in reqs], jnp.int32)
+            temps = jnp.asarray([tr.req.temperature for tr in trs],
+                                jnp.float32)
+            topks = jnp.asarray([tr.req.top_k for tr in trs], jnp.int32)
             firsts = np.asarray(sample_tokens(
                 logits, sub, temps, topks,
-                max_top_k=max(r.top_k for r in reqs),
+                max_top_k=max(tr.req.top_k for tr in trs),
             ))
-            for j, (rid, req) in enumerate(zip(group, reqs)):
+            for j, (rid, tr) in enumerate(zip(group, trs)):
                 slot = free.pop(0)
                 with self._device_ctx():
                     req_caches = (
                         pref_caches if len(group) == 1
                         else self._read_slot(pref_caches, jnp.asarray(j, jnp.int32))
                     )
-                self._install(slot, rid, req, req_caches, int(firsts[j]), glen)
+                self._install(slot, rid, tr, req_caches, int(firsts[j]),
+                              int(glen))
 
     def _retire_finished(self) -> None:
         for i, st in enumerate(self._slots):
             if st.prefilling:
                 continue  # reserved for an in-progress chunked admission
             if st.rid is not None and (st.done or st.remaining <= 0):
-                self._outputs[st.rid] = np.asarray(st.out, np.int32)
-                # drop the Request (prompt + extras) — a long-lived engine
-                # must not accumulate every prompt it ever served
-                self._requests.pop(st.rid, None)
+                tr = self._requests.get(st.rid)
+                self._finalize(st.rid, self._success_status(tr), st.out)
+                self._release_slot(i)
+
+    # -- fault handling -----------------------------------------------------
+
+    def _dispatch(self, scan_fn, args):
+        """One decode-block dispatch with bounded in-place retries.
+
+        The fault plan's injected failure fires BEFORE the real dispatch,
+        so the donated cache survives and an in-place retry is safe and
+        token-identical.  A real dispatch failure may have consumed the
+        donated buffers — retry only while every cache leaf is alive;
+        otherwise (or past ``max_dispatch_retries``) the exception
+        propagates to ``step``'s rebuild path."""
+        attempts = 0
+        while True:
+            try:
+                if self.fault_plan is not None:
+                    self.fault_plan.check_dispatch(self._block)
                 with self._device_ctx():
-                    self.caches = self._clear_slot(
-                        self.caches, jnp.asarray(i, jnp.int32)
-                    )
+                    return scan_fn(*args)
+            except Exception:
+                self._stats["dispatch_failures"] += 1
+                attempts += 1
+                alive = not any(
+                    getattr(leaf, "is_deleted", lambda: False)()
+                    for leaf in jax.tree_util.tree_leaves(self.caches)
+                )
+                if attempts <= self.policy.max_dispatch_retries and alive:
+                    self._stats["dispatch_retries"] += 1
+                    continue
+                raise
+
+    def _rebuild_after_loss(self, error: str) -> None:
+        """Recover from an unretryable dispatch failure: finalize slots
+        whose output was already complete, requeue live ones (bounded
+        retries — their accepted tokens are replayed on re-prefill), and
+        rebuild the slotted cache from zeros."""
+        self._stats["cache_rebuilds"] += 1
+        if self._partial is not None:
+            p, self._partial = self._partial, None
+            self._requeue_for_retry(p.rid, [], error)
+        for i, st in enumerate(self._slots):
+            if st.rid is None:
+                continue
+            if st.done or (st.remaining <= 0 and not st.prefilling):
+                tr = self._requests.get(st.rid)
+                self._finalize(st.rid, self._success_status(tr), st.out)
+            elif not st.prefilling:
+                self._requeue_for_retry(st.rid, list(st.out), error)
+            self._slots[i] = _Slot()
+        with self._device_ctx():
+            self.caches = slots_mod.init_slot_caches(
+                self.cfg, self.max_slots, self.n_max, self._cache_dtype,
+                mesh=self.mesh, rules=self.rules,
+            )
+        self._token[:] = 0
+        self._pos[:] = 0
+        self._temp[:] = 0.0
+        self._topk[:] = 0
+        self._eos[:] = -1
+
+    def _inject_corruptions(self) -> None:
+        """Apply due ``SlotCorruption`` events (fault plan) to the live
+        cache — AFTER this block's tokens were consumed, so the poisoned
+        state has not yet produced a trusted token."""
+        if self.fault_plan is None:
+            return
+        for e in self.fault_plan.take_corruptions(self._block):
+            if not 0 <= e.slot < self.max_slots:
+                continue
+            fill = float("nan") if e.mode == "nan" else float("inf")
+            with self._device_ctx():
+                self.caches = self._corrupt_fn()(
+                    self.caches, jnp.asarray(e.slot, jnp.int32),
+                    jnp.asarray(fill, jnp.float32),
+                )
+            self._stats["corruptions_injected"] += 1
+
+    def _health_sweep(self) -> None:
+        """Quarantine slots whose decode state went non-finite.
+
+        Runs every ``health_check_every`` blocks, straight after the
+        decode block (and any injected corruption), so a poisoned slot is
+        caught before ANY of its garbage tokens is accepted.  Live slots
+        are quarantined (cleared + requeued with their accepted prefix);
+        free/retired/prefilling slots are just scrubbed — their region of
+        the cache is dead state that ``write_slot`` fully overwrites on
+        admission.  Co-batched slots are untouched (tested)."""
+        every = self.policy.health_check_every
+        if not every or self._block % every:
+            return
+        occupied = any(s.rid is not None for s in self._slots)
+        if not occupied:
+            return
+        with self._device_ctx():
+            health = np.asarray(
+                _jitted_slot_health(self.cfg)(self.caches)
+            )
+        self._stats["health_checks"] += 1
+        if health.all():
+            return
+        for i in np.flatnonzero(~health):
+            i = int(i)
+            st = self._slots[i]
+            live = (st.rid is not None and not st.prefilling
+                    and not st.done and st.remaining > 0)
+            finished = (st.rid is not None and not st.prefilling
+                        and (st.done or st.remaining <= 0))
+            if live:
+                self._stats["quarantined"] += 1
+                rid, out = st.rid, list(st.out)
                 self._slots[i] = _Slot()
+                self._requeue_for_retry(
+                    rid, out, "slot state corrupted (quarantined)"
+                )
+            elif finished:
+                # output completed before the corruption — finalize as
+                # success; only the dead cache region was poisoned
+                tr = self._requests.get(st.rid)
+                self._finalize(st.rid, self._success_status(tr), st.out)
+                self._slots[i] = _Slot()
+            # prefilling slots keep their reservation: the partial's
+            # batch-1 caches live outside the slot cache
+            with self._device_ctx():
+                self.caches = self._clear_slot(
+                    self.caches, jnp.asarray(i, jnp.int32)
+                )
+
+    def _has_work(self) -> bool:
+        return (bool(self._queue) or bool(self._retry)
+                or any(s.rid is not None for s in self._slots))
 
     # -- decoding -----------------------------------------------------------
 
     def step(self) -> bool:
         """Admit + advance one decode block.  Returns True while work remains.
 
-        One call = at most one ``decode_scan`` dispatch.  Exposed for tests
-        and for callers interleaving submission with decoding; ``run`` just
-        loops it.
+        One call = at most one ``decode_scan`` dispatch, preceded by the
+        block-boundary bookkeeping in a fixed order: fault-plan floods →
+        deadline/TTL expiry → retire → release backoff retries → admit →
+        dispatch (with bounded retry / cache rebuild) → corruption
+        injection → health sweep → retire.  Exposed for tests and for
+        callers interleaving submission with decoding; ``run`` loops it.
         """
+        self._block += 1
+        now = self._clock()
+        if self.fault_plan is not None:
+            for req in self.fault_plan.flood_requests(self._block,
+                                                      self.cfg.vocab):
+                try:
+                    self.submit(req)
+                except RequestRejected:
+                    pass  # shed/rejected floods are terminal via _results
+        self._expire(now)
         self._retire_finished()
+        self._release_retries()
         self._admit()
         active = self._active_mask()
         if not active.any():
             self._retire_finished()
-            return bool(self._queue) or any(
-                s.rid is not None for s in self._slots
-            )
+            return self._has_work()
         steps = min(
             self.decode_block,
             max(s.remaining for s in self._slots
@@ -520,18 +1043,23 @@ class ServeEngine:
         max_top_k = _next_pow2(max_top_k) if max_top_k > 0 else 0
         self._rng, sub = jax.random.split(self._rng)
         scan_fn = self._decode_scan_fn(int(steps), bool(sampling), max_top_k)
-        with self._device_ctx():
-            (self.caches, token, pos, dev_active, _, toks, mask) = scan_fn(
-                self.params,
-                self.caches,
-                jnp.asarray(self._token),
-                jnp.asarray(self._pos),
-                jnp.asarray(active),
-                jnp.asarray(self._temp),
-                jnp.asarray(self._topk),
-                jnp.asarray(self._eos),
-                sub,
+        try:
+            (self.caches, token, pos, dev_active, _, toks, mask) = (
+                self._dispatch(scan_fn, (
+                    self.params,
+                    self.caches,
+                    jnp.asarray(self._token),
+                    jnp.asarray(self._pos),
+                    jnp.asarray(active),
+                    jnp.asarray(self._temp),
+                    jnp.asarray(self._topk),
+                    jnp.asarray(self._eos),
+                    sub,
+                ))
             )
+        except Exception as e:  # noqa: BLE001 — resilience boundary
+            self._rebuild_after_loss(f"decode dispatch failed: {e}")
+            return self._has_work()
         toks = np.asarray(toks)
         mask = np.asarray(mask)
         # np.array (copy): np.asarray of a jax array is a read-only view,
@@ -541,6 +1069,8 @@ class ServeEngine:
         dev_active = np.asarray(dev_active)
         for i, st in enumerate(self._slots):
             if st.rid is None or st.done or st.prefilling:
+                continue
+            if not active[i]:
                 continue
             for t in range(toks.shape[0]):
                 if not mask[t, i] or st.remaining <= 0:
@@ -552,28 +1082,60 @@ class ServeEngine:
                     break
             if not dev_active[i]:
                 st.done = True
+        self._inject_corruptions()
+        self._health_sweep()
         self._retire_finished()
-        return bool(self._queue) or any(s.rid is not None for s in self._slots)
+        return self._has_work()
 
-    def run(self) -> Dict[int, np.ndarray]:
+    def run(self, return_results: bool = False):
         """Drive admission + decoding until every submitted request is done.
 
-        Drains the finished-output buffer: each request's tokens are
+        Drains the finished-result buffer: each request's outcome is
         returned by exactly one ``run`` call (a long-lived engine must not
         accumulate every answer it ever produced).
 
+        Args:
+          return_results: False (default) returns ``{rid: np.ndarray}`` of
+            new tokens — the pre-resilience contract (non-OK statuses
+            appear with their accepted-prefix tokens).  True returns
+            ``{rid: RequestResult}`` with the full terminal status.
+
         Returns:
-          ``{rid: np.ndarray[int32]}`` — the new tokens of each request
-          completed since the previous ``run`` (first token sampled from
-          the prefill logits, then decoded tokens, truncated at
-          ``eos_id``/``max_new_tokens``).
+          ``{rid: np.ndarray[int32]}`` or ``{rid: RequestResult}`` for
+          every request that reached a terminal status since the previous
+          ``run`` (including REJECTED submissions recorded via their
+          exception's ``rid``).
         """
         while self.step():
             pass
-        out, self._outputs = self._outputs, {}
-        return out
+        out, self._results = self._results, {}
+        if return_results:
+            return out
+        return {rid: r.tokens for rid, r in out.items()}
 
     # -- introspection ------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """Engine counters + gauges (monotonic since construction).
+
+        Counters: ``submitted``, ``rejected``, ``shed``,
+        ``degraded_admissions``, terminal statuses (``ok``, ``degraded``,
+        ``timed_out``, ``failed``), ``quarantined``, ``retries``,
+        ``dispatch_failures``, ``dispatch_retries``, ``cache_rebuilds``,
+        ``corruptions_injected``, ``health_checks``, ``prefill_stalls``.
+        Gauges: ``blocks`` (decode-block counter), ``queue_depth``
+        (queued + awaiting retry), ``slots_occupied``.
+
+        Returns:
+          Dict of counter/gauge name to int value (absent counter = 0).
+        """
+        out = dict(self._stats)
+        out["blocks"] = self._block
+        out["queue_depth"] = self._queue_depth()
+        out["slots_occupied"] = sum(
+            1 for s in self._slots if s.rid is not None
+        )
+        return out
 
     @property
     def slot_state_bytes(self) -> int:

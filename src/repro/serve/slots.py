@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.backends import get_backend, resolve_backend
 from repro.models.config import ModelConfig
-from repro.models.lm import lm_init_caches
+from repro.models.lm import _runs, lm_init_caches
 
 Array = jax.Array
 
@@ -240,6 +240,99 @@ def read_slot(caches, slot: Array):
       produces for a single request.
     """
     return _read_slot_impl(caches, slot)
+
+
+def slot_health(caches, cfg: ModelConfig) -> Array:
+    """Per-slot health of the whole slotted cache (corruption sweep).
+
+    Walks the ``{"group", "tail", "kv_src"}`` pytree with the same
+    per-run-kind dispatch ``lm_init_caches`` used to build it and applies
+    each backend's ``state_health`` hook (finite moments / KV / SSD state,
+    plus backend invariants like KV ``length`` bounds).  Group caches are
+    stacked ``[n_groups, run_len, slots, ...]``, so the hook is vmapped
+    over the two stacking axes and AND-reduced — one fused device
+    reduction over the entire cache, cheap enough to run every decode
+    block (docs/serving.md §Failure semantics).
+
+    Args:
+      caches: the slotted cache pytree (``init_slot_caches`` /
+        ``lm_prefill`` structure).
+      cfg: model config (decides the per-kind backend dispatch).
+
+    Returns:
+      ``[max_slots]`` bool — True where every leaf of that slot's state
+      is healthy; a False slot must be quarantined before its next token
+      is trusted.
+    """
+    backend = resolve_backend(cfg)
+    ssm = get_backend("ssm")
+
+    def one(kind, cache):
+        if kind == "mamba":
+            return ssm.state_health(cache, cfg)
+        if kind == "cross":
+            self_c, cc = cache
+            return (backend.state_health(self_c, cfg)
+                    & backend.state_health(cc.kv, cfg))
+        return backend.state_health(cache, cfg)
+
+    parts = []
+    for (kind, _rl), cache in zip(_runs(cfg.pattern), caches["group"]):
+        h = jax.vmap(jax.vmap(functools.partial(one, kind)))(cache)
+        parts.append(h.all(axis=(0, 1)))  # [n_groups, rl, slots] -> [slots]
+    for kind, cache in zip(cfg.tail, caches["tail"]):
+        parts.append(one(kind, cache))
+    if caches.get("kv_src") is not None:
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        parts.append(tree_slot_health(caches["kv_src"]))
+    if not parts:
+        return jnp.asarray(True)
+    ok = parts[0]
+    for p in parts[1:]:
+        ok = ok & p
+    return ok
+
+
+def _corrupt_slot_impl(caches, slot: Array, fill):
+    def poison(f: Array, axis: int) -> Array:
+        if not jnp.issubdtype(f.dtype, jnp.inexact):
+            return f
+        shape = list(f.shape)
+        shape[axis] = 1
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, jnp.full(shape, fill, f.dtype), slot, axis
+        )
+
+    out = dict(caches)
+    out["group"] = jax.tree.map(
+        lambda f: poison(f, GROUP_SLOT_AXIS), caches["group"]
+    )
+    out["tail"] = jax.tree.map(lambda f: poison(f, TAIL_SLOT_AXIS), caches["tail"])
+    if caches.get("kv_src") is not None:
+        out["kv_src"] = poison(caches["kv_src"], TAIL_SLOT_AXIS)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def corrupt_slot(caches, slot: Array, fill):
+    """Overwrite one slot's inexact state leaves with ``fill`` (NaN/Inf).
+
+    The fault-injection primitive behind ``serve.faults.SlotCorruption``:
+    it poisons exactly the leaves ``slot_health`` checks (int leaves like
+    KV ``length`` are left intact, so the slot looks structurally valid
+    but numerically dead — the silent-corruption case).  Every other slot
+    is bit-identical, which is what the isolation regression tests assert.
+
+    Args:
+      caches: the live slotted cache pytree (donated — updated in place).
+      slot: int32 scalar slot index (traced).
+      fill: scalar poison value (``jnp.nan`` / ``jnp.inf``; traced).
+
+    Returns:
+      The cache pytree with slot ``slot``'s float leaves set to ``fill``.
+    """
+    return _corrupt_slot_impl(caches, slot, fill)
 
 
 def make_sharded_slot_ops(cache_shardings):

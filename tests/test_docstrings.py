@@ -17,6 +17,7 @@ import pytest
 MODULES = (
     "repro.serve",
     "repro.serve.engine",
+    "repro.serve.faults",
     "repro.serve.scheduler",
     "repro.serve.slots",
     "repro.backends",
@@ -44,7 +45,9 @@ DOCUMENTED_SIGNATURES = {
     "repro.serve.slots": (
         "init_slot_caches", "write_slot", "clear_slot", "read_slot",
         "slot_bytes", "slot_cache_shardings", "make_sharded_slot_ops",
+        "slot_health", "corrupt_slot",
     ),
+    "repro.serve.faults": ("standard_trace",),
     "repro.backends.registry": (
         "register_backend", "get_backend", "resolve_backend",
     ),
@@ -92,11 +95,19 @@ def test_entry_points_document_args_and_returns(modname, names):
 
 
 def test_engine_classes_documented():
-    from repro.serve.scheduler import Request, ServeEngine
+    from repro.serve.faults import FaultPlan
+    from repro.serve.scheduler import (
+        Request,
+        RequestResult,
+        ResiliencePolicy,
+        ServeEngine,
+        Status,
+    )
 
-    for cls in (Request, ServeEngine):
+    for cls in (Request, ServeEngine, RequestResult, ResiliencePolicy,
+                Status, FaultPlan):
         assert (inspect.getdoc(cls) or "").strip(), cls
-    for meth in ("submit", "step", "run"):
+    for meth in ("submit", "step", "run", "stats"):
         doc = inspect.getdoc(getattr(ServeEngine, meth)) or ""
         assert doc.strip(), f"ServeEngine.{meth} undocumented"
 

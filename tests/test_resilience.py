@@ -1,0 +1,459 @@
+"""Serving resilience: fault injection, deadlines, shedding, quarantine.
+
+The contract under test (docs/serving.md §Failure semantics): every
+submitted request ends in exactly one terminal ``Status``; the engine
+never crashes under a seeded ``FaultPlan``; and every ``Status.OK``
+output is token-identical to a fault-free run — faults may slow a
+request down (retries, backoff) or end it early (deadline, shed) but
+never silently change what a surviving request decodes.  Greedy per-slot
+decode is batch-parallel, which is what makes that guarantee testable.
+
+Multi-device isolation (the 2x2-mesh NaN test) spawns a fresh python
+with ``--xla_force_host_platform_device_count`` like
+tests/test_serve_sharded.py.
+"""
+
+import itertools
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.models.lm import lm_init_caches
+from repro.serve import (
+    DispatchFailure,
+    FaultPlan,
+    PrefillStall,
+    QueueOverflow,
+    Request,
+    RequestRejected,
+    RequestResult,
+    ResiliencePolicy,
+    ServeEngine,
+    SlotCorruption,
+    Status,
+    corrupt_slot,
+    slot_health,
+    standard_trace,
+)
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_subprocess(code: str) -> str:
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(_REPO / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(_REPO),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One small model + its fault-free reference outputs, shared by every
+    engine test in the module (compilation is the dominant cost)."""
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(4)]
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=4)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8)) for p in prompts]
+    ref = eng.run()
+    return cfg, params, prompts, [ref[r] for r in rids]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("n_max", 64)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Submit-time validation & admission control
+# ---------------------------------------------------------------------------
+
+
+def test_submit_typed_rejections(served):
+    """Invalid requests are rejected at submit with a typed reason — and
+    each rejection is still recorded as a terminal REJECTED result."""
+    cfg, params, prompts, _ = served
+    eng = _engine(cfg, params)
+    cases = [
+        (Request(tokens=[], max_new_tokens=4), "empty_prompt"),
+        (Request(tokens=prompts[0], max_new_tokens=0), "bad_budget"),
+        (Request(tokens=np.zeros(65, np.int32), max_new_tokens=1),
+         "prompt_too_long"),
+        (Request(tokens=prompts[0], max_new_tokens=64), "over_capacity"),
+    ]
+    rids = []
+    for req, reason in cases:
+        with pytest.raises(RequestRejected) as exc:
+            eng.submit(req)
+        assert exc.value.reason == reason
+        assert exc.value.rid is not None
+        rids.append(exc.value.rid)
+    assert eng.stats()["rejected"] == len(cases)
+    results = eng.run(return_results=True)
+    for rid in rids:
+        assert results[rid].status is Status.REJECTED
+        assert results[rid].tokens.size == 0
+    # RequestRejected subclasses ValueError: pre-resilience callers work
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=[], max_new_tokens=4))
+
+
+def test_bounded_queue_sheds_with_queue_overflow(served):
+    """Past ``max_queue`` waiting requests, submit sheds deterministically
+    instead of letting the backlog grow without bound."""
+    cfg, params, prompts, _ = served
+    eng = _engine(cfg, params, policy=ResiliencePolicy(max_queue=3))
+    kept = [eng.submit(Request(tokens=prompts[0], max_new_tokens=4))
+            for _ in range(3)]
+    with pytest.raises(QueueOverflow) as exc:
+        eng.submit(Request(tokens=prompts[0], max_new_tokens=4))
+    assert exc.value.reason == "queue_full"
+    stats = eng.stats()
+    assert stats["shed"] == 1 and stats["rejected"] == 1
+    results = eng.run(return_results=True)
+    assert all(results[r].status is Status.OK for r in kept)
+
+
+def test_overload_degradation_clamps_budget(served):
+    """At ``degrade_queue_depth`` the engine admits DEGRADED: the budget is
+    clamped, and the clamped output is the exact prefix of the request's
+    unconstrained run (degradation trades length, never correctness)."""
+    cfg, params, prompts, ref = served
+    eng = _engine(
+        cfg, params,
+        policy=ResiliencePolicy(degrade_queue_depth=2,
+                                degraded_max_new_tokens=3),
+    )
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8)) for p in prompts]
+    results = eng.run(return_results=True)
+    # queue depth at submit: 0, 1 (below threshold), 2, 3 (degraded)
+    for r, full in zip(rids[:2], ref[:2]):
+        assert results[r].status is Status.OK
+        np.testing.assert_array_equal(results[r].tokens, full)
+    for r, full in zip(rids[2:], ref[2:]):
+        assert results[r].status is Status.DEGRADED
+        np.testing.assert_array_equal(results[r].tokens, full[:3])
+    assert eng.stats()["degraded_admissions"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Deadlines & queue TTL (fake clock; enforced at block boundaries)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_mid_decode_times_out_with_prefix(served):
+    """A deadline expiring mid-decode retires the request TIMED_OUT with
+    the accepted prefix of its fault-free output."""
+    cfg, params, prompts, ref = served
+    clock = itertools.count()  # 1 tick per engine clock read
+    eng = _engine(cfg, params, decode_block=2,
+                  clock=lambda: float(next(clock)))
+    rid = eng.submit(Request(tokens=prompts[0], max_new_tokens=8,
+                             deadline=3.5))  # submit reads t=0
+    results = eng.run(return_results=True)
+    res = results[rid]
+    assert res.status is Status.TIMED_OUT
+    assert "deadline" in res.error
+    assert 0 < res.tokens.size < 8
+    np.testing.assert_array_equal(res.tokens, ref[0][: res.tokens.size])
+
+
+def test_queue_ttl_expires_waiting_request(served):
+    """A request that waits out its queue TTL behind a busy slot is expired
+    without ever decoding; the running request is untouched."""
+    cfg, params, prompts, ref = served
+    clock = itertools.count()
+    eng = _engine(cfg, params, max_slots=1, decode_block=2,
+                  clock=lambda: float(next(clock)))
+    r_busy = eng.submit(Request(tokens=prompts[0], max_new_tokens=8))
+    r_wait = eng.submit(Request(tokens=prompts[1], max_new_tokens=8,
+                                queue_ttl=2.0))
+    results = eng.run(return_results=True)
+    assert results[r_wait].status is Status.TIMED_OUT
+    assert results[r_wait].tokens.size == 0
+    assert results[r_busy].status is Status.OK
+    np.testing.assert_array_equal(results[r_busy].tokens, ref[0])
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: corruption quarantine, dispatch retry, prefill stall
+# ---------------------------------------------------------------------------
+
+
+def test_nan_corruption_isolated_and_recovered(served):
+    """NaN injected into one slot's decode state: the co-batched slot's
+    output is untouched, and the quarantined request recovers (re-prefill
+    from prompt + accepted tokens) token-identically."""
+    cfg, params, prompts, ref = served
+    plan = FaultPlan(events=(SlotCorruption(at_block=1, slot=0,
+                                            mode="nan"),))
+    eng = _engine(cfg, params, fault_plan=plan)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+            for p in prompts[:2]]
+    results = eng.run(return_results=True)
+    for r, full in zip(rids, ref[:2]):
+        assert results[r].status is Status.OK
+        np.testing.assert_array_equal(results[r].tokens, full)
+    stats = eng.stats()
+    assert stats["corruptions_injected"] == 1
+    assert stats["quarantined"] == 1
+    assert stats["retries"] >= 1
+    assert results[rids[0]].retries == 1
+    assert results[rids[1]].retries == 0
+
+
+def test_inf_corruption_quarantined(served):
+    """Same quarantine path for Inf poison (overflow-style corruption)."""
+    cfg, params, prompts, ref = served
+    plan = FaultPlan(events=(SlotCorruption(at_block=1, slot=1,
+                                            mode="inf"),))
+    eng = _engine(cfg, params, fault_plan=plan)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+            for p in prompts[:2]]
+    results = eng.run(return_results=True)
+    for r, full in zip(rids, ref[:2]):
+        assert results[r].status is Status.OK
+        np.testing.assert_array_equal(results[r].tokens, full)
+    assert eng.stats()["quarantined"] == 1
+
+
+def test_dispatch_failure_retried_in_place(served):
+    """An injected dispatch failure (cache survives) is retried in place —
+    zero token divergence, no quarantine, no requeue."""
+    cfg, params, prompts, ref = served
+    plan = FaultPlan(events=(DispatchFailure(at_block=1, count=1),))
+    eng = _engine(cfg, params, fault_plan=plan)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+            for p in prompts[:2]]
+    results = eng.run(return_results=True)
+    for r, full in zip(rids, ref[:2]):
+        assert results[r].status is Status.OK
+        np.testing.assert_array_equal(results[r].tokens, full)
+    stats = eng.stats()
+    assert stats["dispatch_failures"] == 1
+    assert stats["dispatch_retries"] == 1
+    assert stats.get("cache_rebuilds", 0) == 0
+    assert stats.get("quarantined", 0) == 0
+
+
+def test_dispatch_retries_exhausted_rebuilds_then_fails(served):
+    """A persistent dispatch failure exhausts the in-place retries, forces
+    cache rebuilds, and finally finalises the victims FAILED — bounded,
+    crash-free, every request terminal."""
+    cfg, params, prompts, _ = served
+    plan = FaultPlan(events=(DispatchFailure(at_block=1, count=100),))
+    eng = _engine(
+        cfg, params, fault_plan=plan,
+        policy=ResiliencePolicy(max_dispatch_retries=1, max_retries=1,
+                                retry_backoff_blocks=1),
+    )
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+            for p in prompts[:2]]
+    results = eng.run(return_results=True)
+    for r in rids:
+        assert results[r].status is Status.FAILED
+        assert "dispatch" in results[r].error
+    stats = eng.stats()
+    assert stats["cache_rebuilds"] >= 1
+    assert stats["failed"] == 2
+
+
+def test_prefill_stall_delays_but_preserves_output(served):
+    """A stalled chunked prefill delays the long prompt's admission; its
+    output and the busy slot's output are still exact."""
+    cfg, params, prompts, _ = served
+    rng = np.random.default_rng(3)
+    p_long = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+    clean = _engine(cfg, params, prefill_chunk=8, decode_block=2)
+    r0 = clean.submit(Request(tokens=prompts[0], max_new_tokens=8))
+    clean.step()
+    r1 = clean.submit(Request(tokens=p_long, max_new_tokens=6))
+    ref = clean.run()
+    plan = FaultPlan(events=(PrefillStall(at_block=1, steps=2),))
+    eng = _engine(cfg, params, prefill_chunk=8, decode_block=2,
+                  fault_plan=plan)
+    f0 = eng.submit(Request(tokens=prompts[0], max_new_tokens=8))
+    eng.step()
+    f1 = eng.submit(Request(tokens=p_long, max_new_tokens=6))
+    outs = eng.run()
+    np.testing.assert_array_equal(outs[f0], ref[r0])
+    np.testing.assert_array_equal(outs[f1], ref[r1])
+    assert eng.stats()["prefill_stalls"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance workload & fuzz
+# ---------------------------------------------------------------------------
+
+
+def test_standard_trace_acceptance(served):
+    """ISSUE 6 acceptance: under the standard seeded trace (flood + 1
+    dispatch failure + 1 NaN corruption) every request reaches a terminal
+    status, nothing crashes, and every OK output is token-identical to the
+    fault-free run."""
+    cfg, params, prompts, ref = served
+    eng = _engine(cfg, params, fault_plan=standard_trace(slot=0),
+                  policy=ResiliencePolicy(max_queue=4))
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8)) for p in prompts]
+    results = eng.run(return_results=True)
+    assert all(isinstance(r, RequestResult) for r in results.values())
+    for r, full in zip(rids, ref):
+        assert results[r].status in (Status.OK, Status.DEGRADED)
+        np.testing.assert_array_equal(results[r].tokens, full)
+    stats = eng.stats()
+    assert stats["corruptions_injected"] == 1
+    assert stats["dispatch_failures"] == 1
+    assert stats["quarantined"] == 1
+    assert stats["shed"] >= 1
+    # flood requests shed by the bounded queue are terminal too
+    assert stats["ok"] + stats["rejected"] + stats.get("failed", 0) + \
+        stats.get("timed_out", 0) + stats.get("degraded", 0) == len(results)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_random_fault_plans(served, seed):
+    """Seeded random fault plans never crash the engine; every submitted
+    request ends terminal; OK outputs match the fault-free run exactly."""
+    cfg, params, prompts, ref = served
+    plan = FaultPlan.random(seed, horizon=6, slots=2, flood_prompt_len=6,
+                            flood_max_new=3)
+    eng = _engine(cfg, params, fault_plan=plan,
+                  policy=ResiliencePolicy(max_queue=6))
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8)) for p in prompts]
+    results = eng.run(return_results=True)
+    assert eng.stats()["queue_depth"] == 0
+    assert eng.stats()["slots_occupied"] == 0
+    for r, full in zip(rids, ref):
+        assert r in results, f"request {r} has no terminal status"
+        res = results[r]
+        assert isinstance(res.status, Status)
+        if res.status in (Status.OK, Status.DEGRADED):
+            np.testing.assert_array_equal(
+                res.tokens, full[: res.tokens.size]
+                if res.status is Status.DEGRADED else full,
+            )
+
+
+# ---------------------------------------------------------------------------
+# state_health primitives (backend invariants + slot sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,backend", [
+    ("qwen2-1.5b", "taylor"),
+    ("qwen2-1.5b", "softmax"),
+    ("mamba2-780m", None),       # ssm hybrid
+])
+def test_slot_health_flags_only_corrupted_slot(arch, backend):
+    """``corrupt_slot`` + ``slot_health``: exactly the poisoned slot is
+    flagged, for moment, KV and SSM decode states."""
+    cfg = get_reduced(arch)
+    if backend:
+        cfg = cfg.replace(attention=backend)
+    caches = lm_init_caches(cfg, 4, 32)
+    h = np.asarray(slot_health(caches, cfg))
+    assert h.shape == (4,) and h.all()
+    caches = corrupt_slot(caches, jnp.asarray(2, jnp.int32),
+                          jnp.asarray(float("nan"), jnp.float32))
+    h = np.asarray(slot_health(caches, cfg))
+    np.testing.assert_array_equal(h, [True, True, False, True])
+
+
+def test_taylor_state_health_invariants():
+    """Taylor moment health: NaN in any moment OR a negative token count
+    flags the row (n0 < 0 cannot arise from valid accumulation)."""
+    cfg = get_reduced("qwen2-1.5b")
+    be = get_backend("taylor")
+    cache = be.init_cache(cfg, 3, 32, jnp.float32)
+    assert np.asarray(be.state_health(cache, cfg)).all()
+    bad = cache._replace(s2=cache.s2.at[1].set(jnp.nan))
+    np.testing.assert_array_equal(
+        np.asarray(be.state_health(bad, cfg)), [True, False, True])
+    neg = cache._replace(n0=cache.n0.at[0].set(-1.0))
+    np.testing.assert_array_equal(
+        np.asarray(be.state_health(neg, cfg)), [False, True, True])
+
+
+def test_softmax_state_health_invariants():
+    """KV-cache health: Inf in K/V or an out-of-range length flags the row
+    even though the int length leaf can never be NaN."""
+    cfg = get_reduced("qwen2-1.5b").replace(attention="softmax")
+    be = get_backend("softmax")
+    cache = be.init_cache(cfg, 3, 16, jnp.float32)
+    assert np.asarray(be.state_health(cache, cfg)).all()
+    bad = cache._replace(k=cache.k.at[2].set(jnp.inf))
+    np.testing.assert_array_equal(
+        np.asarray(be.state_health(bad, cfg)), [True, True, False])
+    over = cache._replace(length=cache.length.at[1].set(99))
+    np.testing.assert_array_equal(
+        np.asarray(be.state_health(over, cfg)), [True, False, True])
+
+
+# ---------------------------------------------------------------------------
+# Mesh isolation (subprocess: 2x2 host-CPU mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_nan_isolation_2x2_mesh():
+    """The regression the health guard exists for, on a 2x2 mesh: NaN
+    injected into one slot's (sharded) state never changes any other
+    slot's emitted tokens, and the victim recovers identically."""
+    out = _run_subprocess("""
+        import jax, numpy as np, json
+        from repro.configs import get_reduced
+        from repro.models import lm_init
+        from repro.serve import (Request, ServeEngine, FaultPlan,
+                                 SlotCorruption, Status)
+        from repro.launch.mesh import make_serve_mesh
+
+        rng = np.random.default_rng(0)
+        cfg = get_reduced("smollm-135m")
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        prompts = [rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+                   for _ in range(4)]
+
+        def run(mesh, plan):
+            eng = ServeEngine(params, cfg, max_slots=2, n_max=64,
+                              decode_block=4, mesh=mesh, fault_plan=plan)
+            rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+                    for p in prompts]
+            res = eng.run(return_results=True)
+            return [res[r] for r in rids], eng.stats()
+
+        ref, _ = run(None, None)
+        plan = FaultPlan(events=(SlotCorruption(at_block=1, slot=1,
+                                                mode="nan"),))
+        got, stats = run(make_serve_mesh(2, 2), plan)
+        report = {
+            "all_ok": all(r.status is Status.OK for r in got),
+            "identical": all(np.array_equal(a.tokens, b.tokens)
+                             for a, b in zip(ref, got)),
+            "quarantined": stats.get("quarantined", 0),
+        }
+        print(json.dumps(report))
+    """)
+    data = json.loads(out.strip().splitlines()[-1])
+    assert data["all_ok"], data
+    assert data["identical"], data
+    assert data["quarantined"] == 1, data
