@@ -1,0 +1,165 @@
+"""Traffic-realism load bench: seeded arrival traces × scheduler policies.
+
+Replays two deterministic arrival traces (Poisson + bursty MMPP,
+``serve.load``) against the engine under two scheduler policies (strict
+FIFO vs the SLO policy: priority admission + 2:1 decode/prefill
+interleave + fat chunks + preemption), all under the virtual clock — so
+every reported number is machine-independent and byte-reproducible:
+
+  * ``load_{trace}_{policy}`` — TTFT p50/p99, per-token latency p50/p99,
+    goodput-under-SLO (tokens/s of SLO-meeting requests), shed/degrade
+    rates, and dispatches-per-token, priced by ``CostModel`` from the
+    engine's own dispatch counters.
+  * ``load_prefill_fat_chunk`` — chunked-prefill wall-time ratio vs
+    whole-prompt prefill, strict chunks vs fat chunks (wall clock, same
+    96-token prompt as ``BENCH_serve_sharded.json::serve_prefill_chunked``
+    whose 4.18x ratio is the baseline this row must beat).  ASSERTS the
+    fat-chunk ratio improves on both the strict ratio and the checked-in
+    baseline — the fewer-fatter-dispatches win is machine-checked, not
+    eyeballed.
+
+Rows are aggregated into ``BENCH_load.json`` by benchmarks/run.py
+(schema in README.md §Benchmarks; table rendered by render_tables.py).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+
+# ratio_vs_whole of serve_prefill_chunked when fat chunks landed —
+# the measured overhead this bench must improve on.
+BASELINE_CHUNKED_RATIO = 4.18
+
+
+def _load_rows():
+    """Trace × policy replay rows (virtual-clock, deterministic)."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.serve import (
+        ResiliencePolicy,
+        SchedulerPolicy,
+        ServeEngine,
+        bursty_trace,
+        poisson_trace,
+        run_trace,
+    )
+
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    policy = ResiliencePolicy(max_queue=5, degrade_queue_depth=4,
+                              degraded_max_new_tokens=8)
+    scheds = {
+        "fifo": SchedulerPolicy(),
+        "slo": SchedulerPolicy(priority_admission=True, decode_per_prefill=2,
+                               fat_chunk_depth=3, preemption=True),
+    }
+    kw = dict(vocab=cfg.vocab, prompt_len=(4, 20), new_tokens=(3, 10),
+              priorities=(0, 5))
+    # the bursty storm outruns max_queue=5 on purpose: the shed/degrade
+    # path must show up in the reported rates, not just in tests
+    traces = {
+        "poisson": poisson_trace(0, 16, mean_interarrival_s=0.0004, **kw),
+        "bursty": bursty_trace(1, 20, calm_interarrival_s=0.001,
+                               burst_interarrival_s=0.00003,
+                               p_enter_burst=0.3, p_exit_burst=0.1, **kw),
+    }
+
+    rows = []
+    for tname, trace in traces.items():
+        for pname, sched in scheds.items():
+            def make(clock, _s=sched):
+                return ServeEngine(params, cfg, max_slots=2, n_max=64,
+                                   decode_block=4, prefill_chunk=8,
+                                   clock=clock, policy=policy, sched=_s)
+
+            m = run_trace(make, trace, pname).metrics
+            rows.append(emit(
+                f"load_{tname}_{pname}", m["duration_virtual_s"] * 1e6,
+                f"ttft_us_p50={m['ttft_us_p50']};"
+                f"ttft_us_p99={m['ttft_us_p99']};"
+                f"tok_us_p50={m['tok_us_p50']};"
+                f"tok_us_p99={m['tok_us_p99']};"
+                f"goodput_tok_s={m['goodput_tok_per_s']};"
+                f"slo_ok_rate={m['slo_ok_rate']};"
+                f"shed_rate={m['shed_rate']};"
+                f"degrade_rate={m['degrade_rate']};"
+                f"delivered={m['n_delivered']}/{m['n_requests']};"
+                f"dispatches_per_token={m['dispatches_per_token']};"
+                f"preemptions={m['preemptions']}",
+            ))
+    return rows
+
+
+def _fat_chunk_row():
+    """Strict vs fat chunked prefill against the whole-prompt baseline."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.serve import prefill_chunked
+    from repro.serve.engine import _jitted_prefill
+
+    # same model/prompt/chunk as serve_prefill_chunked so the baseline
+    # ratio is apples-to-apples
+    rng = np.random.default_rng(0)
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    n_max, n_prompt, strict_chunk, fat_chunk = 128, 96, 16, 32
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, n_prompt)), jnp.int32)
+    batch = {"tokens": prompt}
+
+    whole_fn = _jitted_prefill(cfg, n_max)
+    lw = whole_fn(params, batch)[0]
+    t_whole = time_fn(lambda: whole_fn(params, batch)[0])
+    diffs = {}
+    ratios = {}
+    for label, chunk in (("strict", strict_chunk), ("fat", fat_chunk)):
+        logits = prefill_chunked(params, batch, cfg, n_max=n_max,
+                                 chunk=chunk)[0]
+        diffs[label] = float(jnp.max(jnp.abs(lw - logits)))
+        t = time_fn(lambda c=chunk: prefill_chunked(
+            params, batch, cfg, n_max=n_max, chunk=c)[0])
+        ratios[label] = t / t_whole
+    improved = (ratios["fat"] < ratios["strict"]
+                and ratios["fat"] < BASELINE_CHUNKED_RATIO)
+    assert improved, (
+        f"fat chunks must beat strict chunks AND the "
+        f"{BASELINE_CHUNKED_RATIO}x baseline: strict={ratios['strict']:.2f} "
+        f"fat={ratios['fat']:.2f}"
+    )
+    return [emit(
+        "load_prefill_fat_chunk", ratios["fat"] * t_whole,
+        f"whole_us={t_whole:.1f};"
+        f"dispatches_strict={n_prompt // strict_chunk};"
+        f"dispatches_fat={n_prompt // fat_chunk};"
+        f"ratio_strict={ratios['strict']:.2f};"
+        f"ratio_fat={ratios['fat']:.2f};"
+        f"baseline_ratio={BASELINE_CHUNKED_RATIO};"
+        f"improved={improved};"
+        f"max_logit_diff={max(diffs.values()):.2e}",
+    )]
+
+
+def run():
+    """Executes the load-harness replays + the fat-chunk prefill check.
+
+    Returns:
+      List of ``name,us,derived`` CSV row strings for run.py aggregation.
+    """
+    return _load_rows() + _fat_chunk_row()
+
+
+if __name__ == "__main__":
+    import json
+    import pathlib
+
+    from benchmarks.run import _parse_rows
+
+    rows = run()
+    out = pathlib.Path(__file__).parent / "BENCH_load.json"
+    out.write_text(json.dumps(_parse_rows(rows), indent=2) + "\n")
+    print(f"# wrote {out}")

@@ -9,7 +9,10 @@ signal — the tracked numbers are:
     decode wall time of the full engine loop on a 1×2 tensor-parallel and
     a 2×1 slot-sharded mesh, with ``tokens_match=True`` asserting
     token-identical output to the single-device engine (the parity claim
-    of tests/test_serve_sharded.py, tracked per PR).
+    of tests/test_serve_sharded.py, tracked per PR), and
+    ``dispatches_per_token`` from the engine's dispatch counters — the
+    scheduler-efficiency number that stays meaningful when host-CPU wall
+    time is noise.
   * ``serve_sharded_single_ref`` — the same workload on the degenerate
     single-device path, for the overhead ratio.
   * ``serve_prefill_chunked`` — chunked long-prompt prefill vs
@@ -58,7 +61,9 @@ _CHILD = """
         t0 = time.perf_counter()
         while eng.step():
             pass
-        return time.perf_counter() - t0
+        s = eng.stats()
+        return {"seconds": time.perf_counter() - t0,
+                "dispatches": s["dispatches"]}
 
     def run_tokens(mesh):
         eng = ServeEngine(params, cfg, max_slots=N_STREAMS, n_max=N_MAX,
@@ -71,18 +76,16 @@ _CHILD = """
     results = {}
     ref_tokens = run_tokens(None)
     run_engine(None)  # warmup/jit
-    t_single = run_engine(None)
-    results["single"] = {"seconds": t_single}
+    results["single"] = run_engine(None)
     for name, shape in (("tp", (1, 2)), ("slots", (2, 1))):
         mesh = make_serve_mesh(*shape)
         toks = run_tokens(mesh)
         run_engine(mesh)  # warmup/jit
-        t = run_engine(mesh)
-        results[name] = {
-            "seconds": t,
-            "tokens_match": toks == ref_tokens,
-            "mesh": "x".join(map(str, shape)),
-        }
+        results[name] = run_engine(mesh)
+        results[name].update(
+            tokens_match=toks == ref_tokens,
+            mesh="x".join(map(str, shape)),
+        )
 
     # chunked long-prompt prefill vs whole prefill (single device, both
     # through their jitted entry points, warmed up)
@@ -127,9 +130,14 @@ def run():
     rows = []
     total = 4 * 24
     t_single = r["single"]["seconds"]
+    # dispatches-per-token makes the fewer-fatter-dispatches work
+    # machine-checkable: the counter moves when scheduling changes, even
+    # when host-CPU wall time is noise
+    dpt_single = r["single"]["dispatches"] / total
     rows.append(emit(
         "serve_sharded_single_ref", t_single * 1e6,
-        f"tok_s={total / t_single:.1f};mesh=1x1",
+        f"tok_s={total / t_single:.1f};mesh=1x1;"
+        f"dispatches_per_token={dpt_single:.3f}",
     ))
     for name in ("tp", "slots"):
         t = r[name]["seconds"]
@@ -137,7 +145,8 @@ def run():
             f"serve_sharded_decode_{name}", t * 1e6,
             f"tok_s={total / t:.1f};mesh={r[name]['mesh']};"
             f"tokens_match={r[name]['tokens_match']};"
-            f"overhead_vs_single={t / t_single:.2f}",
+            f"overhead_vs_single={t / t_single:.2f};"
+            f"dispatches_per_token={r[name]['dispatches'] / total:.3f}",
         ))
     p = r["prefill"]
     rows.append(emit(

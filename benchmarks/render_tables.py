@@ -1,9 +1,10 @@
 """Regenerate the README's measured tables from the BENCH_*.json files.
 
-The README carries three GENERATED markdown tables — the backend×impl
-matrix (BENCH_attention.json), serve throughput (BENCH_serve.json) and
-sharded-serve parity/overhead (BENCH_serve_sharded.json) — between marker
-comments:
+The README carries GENERATED markdown tables — the backend×impl matrix
+(BENCH_attention.json), serve throughput (BENCH_serve.json), sharded-serve
+parity/overhead (BENCH_serve_sharded.json), resilience goodput
+(BENCH_resilience.json) and the load-harness trace×policy metrics
+(BENCH_load.json) — between marker comments:
 
     <!-- BEGIN GENERATED: <name> (benchmarks/render_tables.py --write) -->
     ...table...
@@ -175,11 +176,51 @@ def render_resilience() -> list:
     )
 
 
+def render_load() -> list:
+    """Load-harness rows: trace × policy virtual-clock metrics + the
+    fat-chunk prefill improvement (BENCH_load.json)."""
+    data = _load("BENCH_load.json")
+    rows = []
+    for name, row in sorted(data.items()):
+        m = re.match(r"load_(poisson|bursty)_(\w+)$", name)
+        if not m:
+            continue
+        d = _derived(row)
+        rows.append((
+            f"`{m.group(1)}`", f"`{m.group(2)}`",
+            d.get("ttft_us_p50", "—"), d.get("ttft_us_p99", "—"),
+            d.get("tok_us_p99", "—"), d.get("goodput_tok_s", "—"),
+            d.get("slo_ok_rate", "—"), d.get("shed_rate", "—"),
+            d.get("dispatches_per_token", "—"),
+        ))
+    out = _table(
+        ["trace", "policy", "TTFT p50 (µs)", "TTFT p99 (µs)",
+         "tok p99 (µs)", "goodput tok/s", "SLO-ok", "shed",
+         "dispatch/tok"],
+        rows,
+    )
+    if "load_prefill_fat_chunk" in data:
+        d = _derived(data["load_prefill_fat_chunk"])
+        out += [
+            "",
+            f"Fat chunked prefill: {d.get('dispatches_fat', '?')} dispatches "
+            f"vs {d.get('dispatches_strict', '?')} strict — "
+            f"{d.get('ratio_fat', '?')}× whole-prompt wall vs "
+            f"{d.get('ratio_strict', '?')}× strict "
+            f"(baseline {d.get('baseline_ratio', '?')}×, "
+            f"improved={d.get('improved', '?')}).  All latency/goodput "
+            "numbers are VIRTUAL-clock (CostModel-priced, "
+            "machine-independent).",
+        ]
+    return out
+
+
 RENDERERS = {
     "backend-impl": render_backend_impl,
     "serve-throughput": render_serve,
     "serve-sharded": render_serve_sharded,
     "resilience": render_resilience,
+    "load": render_load,
 }
 
 

@@ -10,10 +10,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_serve        — continuous-batching engine vs per-token loop
   bench_serve_sharded — mesh-sharded engine parity/overhead + chunked prefill
   bench_resilience   — goodput/recovery under the standard fault trace
+  bench_load         — arrival traces × scheduler policies (virtual clock)
 
 Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json``,
-``BENCH_serve.json``, ``BENCH_serve_sharded.json`` and
-``BENCH_resilience.json`` (name ->
+``BENCH_serve.json``, ``BENCH_serve_sharded.json``,
+``BENCH_resilience.json`` and ``BENCH_load.json`` (name ->
 {us_per_call, derived}) next to this file so the backend, kernel and
 serving perf trajectories are machine-readable across PRs, not just
 printed.  Schema documented in README.md §Benchmarks; the README tables
@@ -44,6 +45,7 @@ def main() -> None:
         bench_attention,
         bench_complexity,
         bench_kernel,
+        bench_load,
         bench_longcontext,
         bench_quality,
         bench_resilience,
@@ -55,10 +57,11 @@ def main() -> None:
     t0 = time.time()
     failures = []
     json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {},
-                 "bench_serve_sharded": {}, "bench_resilience": {}}
+                 "bench_serve_sharded": {}, "bench_resilience": {},
+                 "bench_load": {}}
     for mod in (bench_approx, bench_complexity, bench_attention, bench_kernel,
                 bench_longcontext, bench_quality, bench_serve,
-                bench_serve_sharded, bench_resilience):
+                bench_serve_sharded, bench_resilience, bench_load):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
@@ -72,7 +75,8 @@ def main() -> None:
                            ("bench_kernel", "BENCH_kernel.json"),
                            ("bench_serve", "BENCH_serve.json"),
                            ("bench_serve_sharded", "BENCH_serve_sharded.json"),
-                           ("bench_resilience", "BENCH_resilience.json")):
+                           ("bench_resilience", "BENCH_resilience.json"),
+                           ("bench_load", "BENCH_load.json")):
         if json_rows[name]:
             out_path = pathlib.Path(__file__).parent / out_name
             out_path.write_text(json.dumps(json_rows[name], indent=2) + "\n")

@@ -10,6 +10,13 @@ Resilience (docs/serving.md §Failure semantics): every request ends in a
 terminal ``Status`` carried by a ``RequestResult``; ``ResiliencePolicy``
 configures shedding/degradation/deadlines/retries; ``faults.FaultPlan``
 injects deterministic failures for tests and ``bench_resilience``.
+
+Scheduling + load (docs/serving.md §Scheduling): ``SchedulerPolicy``
+grows admission from strict FIFO to priority classes, decode/prefill
+interleave ratios, fat chunked-prefill chunks, and preemption with state
+handoff; ``load.py`` (``poisson_trace``/``bursty_trace``/``run_trace``)
+replays seeded arrival traces under a virtual clock for
+``benchmarks/bench_load.py``.
 """
 
 from repro.serve.engine import (
@@ -31,12 +38,24 @@ from repro.serve.faults import (
     SlotCorruption,
     standard_trace,
 )
+from repro.serve.load import (
+    SLO,
+    CostModel,
+    LoadReport,
+    Trace,
+    TraceItem,
+    VirtualClock,
+    bursty_trace,
+    poisson_trace,
+    run_trace,
+)
 from repro.serve.scheduler import (
     QueueOverflow,
     Request,
     RequestRejected,
     RequestResult,
     ResiliencePolicy,
+    SchedulerPolicy,
     ServeEngine,
     Status,
 )
@@ -52,10 +71,12 @@ from repro.serve.slots import (
 )
 
 __all__ = [
+    "CostModel",
     "DispatchFailure",
     "FaultPlan",
     "InjectedDispatchError",
     "InjectedFault",
+    "LoadReport",
     "PrefillStall",
     "QueueFlood",
     "QueueOverflow",
@@ -63,9 +84,15 @@ __all__ = [
     "RequestRejected",
     "RequestResult",
     "ResiliencePolicy",
+    "SLO",
+    "SchedulerPolicy",
     "ServeEngine",
     "SlotCorruption",
     "Status",
+    "Trace",
+    "TraceItem",
+    "VirtualClock",
+    "bursty_trace",
     "clear_slot",
     "corrupt_slot",
     "decode_scan",
@@ -73,9 +100,11 @@ __all__ = [
     "generate",
     "generate_loop",
     "init_slot_caches",
+    "poisson_trace",
     "prefill",
     "prefill_chunked",
     "read_slot",
+    "run_trace",
     "sample_tokens",
     "slot_bytes",
     "slot_cache_shardings",

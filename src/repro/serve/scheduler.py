@@ -105,12 +105,22 @@ class RequestResult:
         greedy requests are token-identical to a fault-free run (tested).
       error: human-readable cause for non-successful statuses.
       retries: number of re-prefill retries the request consumed.
+      preemptions: times the request was preempted back to the queue.
+      submitted_at: engine-clock time of ``submit`` (virtual seconds under
+        the load harness's ``VirtualClock`` — serve/load.py).
+      first_token_at: engine-clock time the first output token existed
+        (end of prefill); None if the request never reached a slot.
+      finished_at: engine-clock time the terminal status was recorded.
     """
 
     status: Status
     tokens: np.ndarray
     error: Optional[str] = None
     retries: int = 0
+    preemptions: int = 0
+    submitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
 
 class RequestRejected(ValueError):
@@ -181,6 +191,57 @@ class ResiliencePolicy:
     health_check_every: int = 1
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """SLO-driven scheduling knobs (docs/serving.md §Scheduling).
+
+    The defaults reproduce the original FIFO head-of-line scheduler
+    exactly: strict arrival-order admission, one prefill chunk per engine
+    step, fixed chunk size, no preemption.  Turning the knobs on trades
+    strict FIFO fairness for tail-latency control under load — the
+    policies ``benchmarks/bench_load.py`` measures against each other.
+
+    Attributes:
+      priority_admission: admit by ``(Request.priority, arrival)`` instead
+        of strict FIFO, and keep admitting short/high-priority requests
+        into remaining free slots while a long chunked prefill is in
+        flight (lifts the head-of-line starvation of the FIFO scheduler —
+        pinned by ``tests/test_load.py``).
+      decode_per_prefill: decode blocks run per prefill chunk of an
+        in-flight chunked admission (interleave ratio).  1 = strict
+        alternation (the original behaviour); N > 1 protects the
+        per-token latency of in-flight slots at the cost of admission
+        latency.  While no slot is actively decoding, chunks always feed
+        every step — throttling an idle engine would be pure waste.
+      fat_chunk_depth: queue depth at which chunked-prefill chunks FATTEN:
+        the chunk size is multiplied by a power-of-two factor
+        (``1 + depth // fat_chunk_depth``, bucketed, capped at
+        ``fat_chunk_max``) so a deep backlog is drained with fewer, fatter
+        dispatches — the measured chunked-prefill overhead is per-dispatch
+        (BENCH_serve_sharded.json).  None = fixed chunk size.
+      fat_chunk_max: cap on the fattening factor (power of two).
+      preemption: preempt over-budget low-priority ACTIVE slots back to
+        the queue when a strictly higher-priority request is waiting and
+        no slot is free.  The slot's decode state is saved with
+        ``read_slot`` (state handoff — O(1) bytes on the taylor backend)
+        and spliced back with ``write_slot`` on re-admission, so the
+        resumed request continues token-identically WITHOUT re-prefill.
+      preempt_min_tokens: a slot only becomes preemptible after producing
+        this many tokens (anti-thrash floor).
+      max_preemptions: per-request preemption bound (prevents a stream of
+        high-priority arrivals from starving a low-priority request
+        forever).
+    """
+
+    priority_admission: bool = False
+    decode_per_prefill: int = 1
+    fat_chunk_depth: Optional[int] = None
+    fat_chunk_max: int = 4
+    preemption: bool = False
+    preempt_min_tokens: int = 1
+    max_preemptions: int = 2
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.
@@ -203,6 +264,10 @@ class Request:
       queue_ttl: seconds the request may wait UNQUEUED work (queued or
         awaiting retry) before it is expired TIMED_OUT without ever
         decoding.  None = waits forever.
+      priority: admission class — SMALLER is more urgent (0 = highest).
+        Ignored by the default FIFO scheduler; with
+        ``SchedulerPolicy.priority_admission`` it orders admission and
+        (with ``preemption``) can evict strictly lower-priority slots.
     """
 
     tokens: np.ndarray
@@ -213,6 +278,7 @@ class Request:
     extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     deadline: Optional[float] = None
     queue_ttl: Optional[float] = None
+    priority: int = 0
 
 
 def _next_pow2(n: int) -> int:
@@ -249,6 +315,16 @@ class _Tracked:
     retries: int = 0
     accepted: List[int] = dataclasses.field(default_factory=list)
     not_before_block: int = 0         # retry backoff gate
+    first_token_at: Optional[float] = None
+    preemptions: int = 0
+    # Preemption state handoff: the slot's decode state saved by
+    # ``read_slot`` plus the token/pos vector entries — re-admission
+    # splices it back and resumes WITHOUT re-prefill (token-identical by
+    # construction).  Cleared when the request instead re-prefills (retry
+    # path), where the saved state would be stale.
+    saved_state: Any = None
+    saved_token: int = 0
+    saved_pos: int = 0
 
     def effective_tokens(self) -> np.ndarray:
         toks = np.asarray(self.req.tokens).reshape(-1).astype(np.int32)
@@ -270,6 +346,7 @@ class _PartialPrefill:
     caches: Any           # batch-1 cache pytree being accumulated
     consumed: int = 0     # prompt tokens absorbed so far
     logits: Optional[Array] = None  # last chunk's final-position logits
+    last_chunk_block: int = 0       # interleave-ratio gate (decode_per_prefill)
 
 
 class ServeEngine:
@@ -307,6 +384,7 @@ class ServeEngine:
         rules=None,
         prefill_chunk: Optional[int] = None,
         policy: Optional[ResiliencePolicy] = None,
+        sched: Optional[SchedulerPolicy] = None,
         fault_plan=None,
         clock: Optional[Callable[[], float]] = None,
     ):
@@ -342,10 +420,14 @@ class ServeEngine:
             behaviour).
           policy: ``ResiliencePolicy`` (None = defaults: unbounded queue,
             no degradation, health sweep every block, bounded retries).
+          sched: ``SchedulerPolicy`` (None = defaults: strict-FIFO
+            head-of-line admission, 1:1 decode/prefill interleave, fixed
+            chunks, no preemption — the original scheduler exactly).
           fault_plan: optional ``serve.faults.FaultPlan`` consulted at
             block boundaries (deterministic fault injection).
           clock: monotonic-seconds source for deadlines/TTL (defaults to
-            ``time.monotonic``; tests inject counters).
+            ``time.monotonic``; tests and the load harness inject virtual
+            clocks — ``serve.load.VirtualClock``).
         """
         if max_slots < 1 or decode_block < 1:
             raise ValueError("max_slots and decode_block must be >= 1")
@@ -357,6 +439,9 @@ class ServeEngine:
         self.decode_block = decode_block
         self.prefill_chunk = prefill_chunk
         self.policy = policy if policy is not None else ResiliencePolicy()
+        self.sched = sched if sched is not None else SchedulerPolicy()
+        if self.sched.decode_per_prefill < 1:
+            raise ValueError("decode_per_prefill must be >= 1")
         self.fault_plan = fault_plan
         self._clock = clock if clock is not None else time.monotonic
         self.mesh = mesh
@@ -514,10 +599,13 @@ class ServeEngine:
                 )
         except RequestRejected as e:
             self._stats["rejected"] += 1
+            now = self._clock()
             self._results[rid] = RequestResult(
                 status=Status.REJECTED,
                 tokens=np.zeros((0,), np.int32),
                 error=str(e),
+                submitted_at=now,
+                finished_at=now,
             )
             if e.rid is None:
                 e.rid = rid
@@ -600,13 +688,18 @@ class ServeEngine:
     def _finalize(self, rid: int, status: Status, tokens,
                   error: Optional[str] = None) -> None:
         """Record a request's terminal ``RequestResult`` and drop its
-        tracking state (prompt + extras must not accumulate)."""
+        tracking state (prompt + extras + saved preemption state must not
+        accumulate)."""
         tr = self._requests.pop(rid, None)
         self._results[rid] = RequestResult(
             status=status,
             tokens=np.asarray(list(tokens), np.int32),
             error=error,
             retries=tr.retries if tr is not None else 0,
+            preemptions=tr.preemptions if tr is not None else 0,
+            submitted_at=tr.submitted_at if tr is not None else None,
+            first_token_at=tr.first_token_at if tr is not None else None,
+            finished_at=self._clock(),
         )
         self._stats[status.value] += 1
 
@@ -642,6 +735,10 @@ class ServeEngine:
         tr.retries += 1
         self._stats["retries"] += 1
         tr.accepted = list(accepted)
+        # The retry path re-prefills from prompt + accepted; any preemption
+        # state saved earlier is older than ``accepted`` and must not be
+        # resumed from.
+        tr.saved_state = None
         tr.not_before_block = self._block + (
             self.policy.retry_backoff_blocks * (1 << (tr.retries - 1))
         )
@@ -717,6 +814,9 @@ class ServeEngine:
         st.rid, st.done, st.prefilling = rid, False, False
         st.out = list(tr.accepted) + [first]
         st.remaining = tr.budget - len(st.out)
+        if tr.first_token_at is None:
+            tr.first_token_at = self._clock()
+        tr.saved_state = None
         self._token[slot] = first
         self._pos[slot] = prompt_len
         self._temp[slot] = req.temperature
@@ -726,7 +826,21 @@ class ServeEngine:
             st.done = True
 
     def _chunk_for(self, tr: _Tracked) -> Optional[int]:
-        return tr.chunk if tr.chunk is not None else self.prefill_chunk
+        """Effective prefill-chunk size for one request, fattened by a
+        power-of-two factor when the queue is deep (``fat_chunk_depth``):
+        the measured chunked-prefill cost is per-DISPATCH, so a backlog is
+        drained fastest with fewer, fatter chunks.  Power-of-two bucketing
+        keeps the number of compiled chunk widths O(log)."""
+        chunk = tr.chunk if tr.chunk is not None else self.prefill_chunk
+        depth_at = self.sched.fat_chunk_depth
+        if chunk is None or not depth_at:
+            return chunk
+        depth = self._queue_depth()
+        if depth < depth_at:
+            return chunk
+        factor = min(self.sched.fat_chunk_max,
+                     _next_pow2(1 + depth // depth_at))
+        return chunk * factor
 
     def _needs_chunked_prefill(self, tr: _Tracked) -> bool:
         chunk = self._chunk_for(tr)
@@ -754,7 +868,11 @@ class ServeEngine:
                 self.params, chunk, p.caches,
                 jnp.asarray(p.consumed, jnp.int32),
             )
+        self._stats["dispatches"] += 1
+        self._stats["prefill_dispatches"] += 1
+        self._stats["prefill_tokens"] += take
         p.consumed += take
+        p.last_chunk_block = self._block
         if p.consumed < n:
             return
         self._rng, sub = jax.random.split(self._rng)
@@ -767,33 +885,144 @@ class ServeEngine:
         self._install(p.slot, p.rid, tr, p.caches, first, n)
         self._partial = None
 
+    def _partial_due(self) -> bool:
+        """Interleave-ratio gate: is the in-flight chunked admission owed
+        its next chunk this step?  With ``decode_per_prefill = N`` a chunk
+        feeds every N-th engine step while decode is active; an otherwise
+        idle engine always feeds (throttling it would be pure waste)."""
+        n = self.sched.decode_per_prefill
+        if n <= 1 or not self._active_mask().any():
+            return True
+        return self._block - self._partial.last_chunk_block >= n
+
+    def _admission_order(self) -> List[int]:
+        """Queued rids in admission order: arrival order (FIFO, with
+        retries already at the queue front), or stable
+        ``(priority, queue position)`` under ``priority_admission``."""
+        if not self.sched.priority_admission:
+            return list(self._queue)
+        return [rid for _, _, rid in sorted(
+            (self._requests[rid].req.priority, i, rid)
+            for i, rid in enumerate(self._queue)
+        )]
+
+    def _resume(self, slot: int, rid: int, tr: _Tracked) -> None:
+        """Re-admit a preempted request from its saved decode state.
+
+        The state handoff: ``write_slot`` splices the ``read_slot``
+        snapshot back in and the token/pos vector entries are restored, so
+        decoding continues from EXACTLY the preempted step — no prefill
+        dispatch, token-identical by construction (tested)."""
+        req = tr.req
+        with self._device_ctx():
+            self.caches = self._write_slot(
+                self.caches, tr.saved_state, jnp.asarray(slot, jnp.int32)
+            )
+        st = self._slots[slot]
+        st.rid, st.done, st.prefilling = rid, False, False
+        st.out = list(tr.accepted)
+        st.remaining = tr.budget - len(st.out)
+        self._token[slot] = tr.saved_token
+        self._pos[slot] = tr.saved_pos
+        self._temp[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+        tr.saved_state = None
+        self._stats["resumes"] += 1
+
+    def _preempt(self) -> None:
+        """Evict at most one over-budget low-priority slot per block.
+
+        Fires only when preemption is on, no slot is free, and a STRICTLY
+        higher-priority request is queued.  The victim — worst admission
+        class first, most remaining budget as tie-break — has its decode
+        state saved via ``read_slot`` (O(1) bytes on the taylor backend)
+        and re-enters the queue; ``_resume`` later splices the state back.
+        ``max_preemptions`` bounds how often one request can be bounced."""
+        if not (self.sched.preemption and self._queue):
+            return
+        if any(s.rid is None for s in self._slots):
+            return
+        best_wait = min(self._requests[rid].req.priority
+                        for rid in self._queue if rid in self._requests)
+        victim = None
+        for i, st in enumerate(self._slots):
+            if (st.rid is None or st.prefilling or st.done
+                    or st.remaining <= 0):
+                continue
+            tr = self._requests.get(st.rid)
+            if (tr is None or tr.req.priority <= best_wait
+                    or tr.preemptions >= self.sched.max_preemptions
+                    or len(st.out) < self.sched.preempt_min_tokens):
+                continue
+            key = (tr.req.priority, st.remaining, st.rid)
+            if victim is None or key > victim[0]:
+                victim = (key, i)
+        if victim is None:
+            return
+        i = victim[1]
+        st = self._slots[i]
+        rid, tr = st.rid, self._requests[st.rid]
+        with self._device_ctx():
+            tr.saved_state = self._read_slot(
+                self.caches, jnp.asarray(i, jnp.int32)
+            )
+        tr.saved_token = int(self._token[i])
+        tr.saved_pos = int(self._pos[i])
+        tr.accepted = list(st.out)
+        tr.preemptions += 1
+        self._stats["preemptions"] += 1
+        self._release_slot(i)
+        self._queue.append(rid)
+
     def _admit(self) -> None:
         """Prefill queued requests into free slots (between decode blocks).
 
-        Consecutive queued requests with equal prompt length share ONE
+        Admission-order requests with equal prompt length share ONE
         batched prefill dispatch (their per-request caches are sliced out
         with ``read_slot`` and spliced into slots), so a burst of
         same-shape requests — e.g. everything ``generate`` submits — pays
-        one prefill, not one per request.
+        one prefill, not one per request.  Under the default FIFO policy
+        only CONSECUTIVE equal-length requests group (strict arrival
+        order); ``priority_admission`` groups equal lengths from anywhere
+        in the admission order (fewer, fatter dispatches).  Preempted
+        requests resume from their saved state with NO dispatch at all.
 
-        With ``prefill_chunk`` set, a long prompt at the head of the queue
-        is instead admitted CHUNK BY CHUNK: its slot is reserved, one
-        chunk is prefilled per engine step, and the decode blocks of the
-        other slots run in between — head-of-line admission stays FIFO but
-        no longer monopolises the device for the whole prompt."""
-        # Advance an in-progress chunked admission by exactly one chunk
-        # (unless the fault plan stalls it this step).
+        With ``prefill_chunk`` set, a long prompt is admitted CHUNK BY
+        CHUNK: its slot is reserved, chunks are prefilled per the
+        ``decode_per_prefill`` interleave ratio, and decode blocks of the
+        other slots run in between.  Under FIFO, later requests wait
+        behind the long prompt (head-of-line, the original contract);
+        under ``priority_admission`` they keep admitting into remaining
+        free slots — the fairness fix ``tests/test_load.py`` pins."""
+        # Advance an in-progress chunked admission (unless the fault plan
+        # stalls it, or the interleave ratio says decode blocks go first).
         if self._partial is not None:
             if (self.fault_plan is not None
                     and self.fault_plan.prefill_stalled(self._block)):
                 self._stats["prefill_stalls"] += 1
-            else:
+            elif self._partial_due():
                 self._advance_partial()
+        if self._partial is not None and not self.sched.priority_admission:
+            return  # strict FIFO: nothing admits behind an in-flight prefill
         free = self._free_slots()
-        while free and self._queue and self._partial is None:
-            head = self._requests[self._queue[0]]
-            if self._needs_chunked_prefill(head):
-                rid = self._queue.popleft()
+        order = self._admission_order()
+        while free and order:
+            rid = order[0]
+            tr = self._requests[rid]
+            if tr.saved_state is not None:
+                order.pop(0)
+                self._queue.remove(rid)
+                self._resume(free.pop(0), rid, tr)
+                continue
+            if self._needs_chunked_prefill(tr):
+                if self._partial is not None:
+                    # one partial at a time; under priority admission the
+                    # rest of the order may still admit into other slots
+                    order.pop(0)
+                    continue
+                order.pop(0)
+                self._queue.remove(rid)
                 slot = free.pop(0)
                 st = self._slots[slot]
                 st.rid, st.prefilling, st.done = rid, True, False
@@ -805,53 +1034,63 @@ class ServeEngine:
                     )
                 self._partial = _PartialPrefill(
                     rid=rid, slot=slot, caches=partial_caches,
+                    last_chunk_block=self._block,
                 )
                 self._advance_partial()  # first chunk this step
-                continue  # FIFO: later requests wait behind the long prompt
-            # Longest FIFO run of equal-prompt-length requests that fits
-            # the free slots (extras shapes are uniform per config —
-            # enforced at submit).
-            group = [self._queue.popleft()]
-            glen = self._requests[group[0]].effective_tokens().shape[-1]
-            while (
-                len(group) < len(free)
-                and self._queue
-                and not self._needs_chunked_prefill(
-                    self._requests[self._queue[0]]
-                )
-                and self._requests[self._queue[0]].effective_tokens(
-                ).shape[-1] == glen
-            ):
-                group.append(self._queue.popleft())
-            trs = [self._requests[rid] for rid in group]
+                if not self.sched.priority_admission:
+                    return  # FIFO: later requests wait behind the long prompt
+                continue
+            # Batched admission group: equal-effective-length requests in
+            # admission order (extras shapes are uniform per config —
+            # enforced at submit).  FIFO stops at the first mismatch to
+            # preserve strict arrival order; priority admission scans on.
+            group = [rid]
+            glen = tr.effective_tokens().shape[-1]
+            for cand in order[1:]:
+                if len(group) >= len(free):
+                    break
+                ctr = self._requests[cand]
+                if (ctr.saved_state is None
+                        and not self._needs_chunked_prefill(ctr)
+                        and ctr.effective_tokens().shape[-1] == glen):
+                    group.append(cand)
+                elif not self.sched.priority_admission:
+                    break
+            order = [r for r in order if r not in group]
+            for g in group:
+                self._queue.remove(g)
+            trs = [self._requests[g] for g in group]
             batch = {"tokens": jnp.asarray(
-                np.stack([tr.effective_tokens() for tr in trs]), jnp.int32
+                np.stack([t.effective_tokens() for t in trs]), jnp.int32
             )}
             for k in trs[0].req.extras:
                 batch[k] = jnp.asarray(
-                    np.concatenate([np.asarray(tr.req.extras[k])
-                                    for tr in trs])
+                    np.concatenate([np.asarray(t.req.extras[k])
+                                    for t in trs])
                 )
             with self._device_ctx():
                 logits, pref_caches = _jitted_prefill(self.cfg, self.n_max)(
                     self.params, batch
                 )
+            self._stats["dispatches"] += 1
+            self._stats["prefill_dispatches"] += 1
+            self._stats["prefill_tokens"] += int(glen) * len(group)
             self._rng, sub = jax.random.split(self._rng)
-            temps = jnp.asarray([tr.req.temperature for tr in trs],
+            temps = jnp.asarray([t.req.temperature for t in trs],
                                 jnp.float32)
-            topks = jnp.asarray([tr.req.top_k for tr in trs], jnp.int32)
+            topks = jnp.asarray([t.req.top_k for t in trs], jnp.int32)
             firsts = np.asarray(sample_tokens(
                 logits, sub, temps, topks,
-                max_top_k=max(tr.req.top_k for tr in trs),
+                max_top_k=max(t.req.top_k for t in trs),
             ))
-            for j, (rid, tr) in enumerate(zip(group, trs)):
+            for j, (g, t) in enumerate(zip(group, trs)):
                 slot = free.pop(0)
                 with self._device_ctx():
                     req_caches = (
                         pref_caches if len(group) == 1
                         else self._read_slot(pref_caches, jnp.asarray(j, jnp.int32))
                     )
-                self._install(slot, rid, tr, req_caches, int(firsts[j]),
+                self._install(slot, g, t, req_caches, int(firsts[j]),
                               int(glen))
 
     def _retire_finished(self) -> None:
@@ -1017,6 +1256,7 @@ class ServeEngine:
         self._expire(now)
         self._retire_finished()
         self._release_retries()
+        self._preempt()
         self._admit()
         active = self._active_mask()
         if not active.any():
@@ -1060,6 +1300,8 @@ class ServeEngine:
         except Exception as e:  # noqa: BLE001 — resilience boundary
             self._rebuild_after_loss(f"decode dispatch failed: {e}")
             return self._has_work()
+        self._stats["dispatches"] += 1
+        self._stats["decode_dispatches"] += 1
         toks = np.asarray(toks)
         mask = np.asarray(mask)
         # np.array (copy): np.asarray of a jax array is a read-only view,
@@ -1077,6 +1319,7 @@ class ServeEngine:
                     break
                 st.out.append(int(toks[t, i]))
                 st.remaining -= 1
+                self._stats["decode_tokens"] += 1
                 if self._eos[i] >= 0 and toks[t, i] == self._eos[i]:
                     st.done = True
                     break
@@ -1108,10 +1351,23 @@ class ServeEngine:
         """
         while self.step():
             pass
+        return self.poll() if return_results else {
+            rid: r.tokens for rid, r in self.poll().items()
+        }
+
+    def poll(self) -> Dict[int, RequestResult]:
+        """Drain terminal results accumulated so far WITHOUT stepping.
+
+        For callers driving the engine step-by-step (the load harness,
+        tests interleaving submission with decoding): each terminal
+        ``RequestResult`` is returned by exactly one ``poll``/``run`` call.
+
+        Returns:
+          ``{rid: RequestResult}`` for every request that reached a
+          terminal status since the previous drain (possibly empty).
+        """
         out, self._results = self._results, {}
-        if return_results:
-            return out
-        return {rid: r.tokens for rid, r in out.items()}
+        return out
 
     # -- introspection ------------------------------------------------------
 
@@ -1122,7 +1378,12 @@ class ServeEngine:
         ``degraded_admissions``, terminal statuses (``ok``, ``degraded``,
         ``timed_out``, ``failed``), ``quarantined``, ``retries``,
         ``dispatch_failures``, ``dispatch_retries``, ``cache_rebuilds``,
-        ``corruptions_injected``, ``health_checks``, ``prefill_stalls``.
+        ``corruptions_injected``, ``health_checks``, ``prefill_stalls``;
+        dispatch accounting: ``dispatches`` (every device round-trip),
+        ``decode_dispatches``/``decode_tokens`` and
+        ``prefill_dispatches``/``prefill_tokens`` (the
+        dispatches-per-token numerator/denominators ``bench_load``
+        reports); scheduling: ``preemptions``, ``resumes``.
         Gauges: ``blocks`` (decode-block counter), ``queue_depth``
         (queued + awaiting retry), ``slots_occupied``.
 

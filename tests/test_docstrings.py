@@ -18,6 +18,7 @@ MODULES = (
     "repro.serve",
     "repro.serve.engine",
     "repro.serve.faults",
+    "repro.serve.load",
     "repro.serve.scheduler",
     "repro.serve.slots",
     "repro.backends",
@@ -48,6 +49,7 @@ DOCUMENTED_SIGNATURES = {
         "slot_health", "corrupt_slot",
     ),
     "repro.serve.faults": ("standard_trace",),
+    "repro.serve.load": ("poisson_trace", "bursty_trace", "run_trace"),
     "repro.backends.registry": (
         "register_backend", "get_backend", "resolve_backend",
     ),
@@ -96,18 +98,28 @@ def test_entry_points_document_args_and_returns(modname, names):
 
 def test_engine_classes_documented():
     from repro.serve.faults import FaultPlan
+    from repro.serve.load import (
+        SLO,
+        CostModel,
+        LoadReport,
+        Trace,
+        TraceItem,
+        VirtualClock,
+    )
     from repro.serve.scheduler import (
         Request,
         RequestResult,
         ResiliencePolicy,
+        SchedulerPolicy,
         ServeEngine,
         Status,
     )
 
     for cls in (Request, ServeEngine, RequestResult, ResiliencePolicy,
-                Status, FaultPlan):
+                Status, FaultPlan, SchedulerPolicy, Trace, TraceItem,
+                VirtualClock, CostModel, SLO, LoadReport):
         assert (inspect.getdoc(cls) or "").strip(), cls
-    for meth in ("submit", "step", "run", "stats"):
+    for meth in ("submit", "step", "run", "poll", "stats"):
         doc = inspect.getdoc(getattr(ServeEngine, meth)) or ""
         assert doc.strip(), f"ServeEngine.{meth} undocumented"
 

@@ -1,0 +1,472 @@
+"""Load harness + SLO scheduler: property suite over seeded random traces.
+
+The scheduling invariants under test (docs/serving.md §Scheduling):
+
+* no slot is ever assigned to two requests (checked after EVERY step);
+* every submitted rid reaches EXACTLY ONE terminal ``RequestResult``;
+* accepted-token prefixes of preempted/retried requests are preserved;
+* OK outputs under ANY schedule — FIFO, priority admission, preemption,
+  interleave throttling, fat chunks — are token-identical to solo greedy
+  runs of the same request;
+* deadlines/TTLs are monotone under the virtual clock (TIMED_OUT fires at
+  or after the budget, never before; timestamps are ordered);
+* same seed + same policy ⇒ byte-identical replay (``LoadReport``
+  metrics AND per-request outcome log), on single-device and a 2x2 mesh.
+
+``hypothesis`` is optional in this environment, so the property tests run
+the same shape — randomised inputs, engine-agnostic invariants — over a
+seeded parametrised grid instead of a shrinking search.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.serve import (
+    Request,
+    ResiliencePolicy,
+    SchedulerPolicy,
+    ServeEngine,
+    Status,
+    bursty_trace,
+    poisson_trace,
+    run_trace,
+)
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+FIFO = SchedulerPolicy()
+SLO_POLICY = SchedulerPolicy(
+    priority_admission=True, decode_per_prefill=2,
+    fat_chunk_depth=3, preemption=True,
+)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Small model shared by every test (compilation dominates runtime)."""
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("n_max", 64)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _factory(cfg, params, sched, **kw):
+    def make(clock):
+        return _engine(cfg, params, clock=clock, sched=sched, **kw)
+    return make
+
+
+def _solo(cfg, params, item):
+    """Reference: the item decoded alone on a fresh FIFO engine."""
+    eng = _engine(cfg, params)
+    rid = eng.submit(Request(tokens=np.asarray(item.tokens, np.int32),
+                             max_new_tokens=item.max_new_tokens))
+    return eng.run()[rid]
+
+
+def _trace(kind, seed, vocab, n=10, **kw):
+    kw.setdefault("prompt_len", (4, 20))
+    kw.setdefault("new_tokens", (3, 10))
+    if kind == "poisson":
+        kw.setdefault("mean_interarrival_s", 0.0004)
+        return poisson_trace(seed, n, vocab, **kw)
+    kw.setdefault("calm_interarrival_s", 0.002)
+    kw.setdefault("burst_interarrival_s", 0.0002)
+    return bursty_trace(seed, n, vocab, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Trace generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["poisson", "bursty"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_trace_generator_deterministic_and_well_formed(kind, seed):
+    """Same seed ⇒ identical trace (tokens included); arrivals are
+    non-decreasing; every drawn value respects its configured bounds."""
+    a = _trace(kind, seed, vocab=257, n=40, priorities=(0, 3, 7))
+    b = _trace(kind, seed, vocab=257, n=40, priorities=(0, 3, 7))
+    assert a == b
+    assert a != _trace(kind, seed + 1, vocab=257, n=40,
+                       priorities=(0, 3, 7))
+    assert len(a) == 40
+    times = [it.t for it in a.items]
+    assert times == sorted(times) and times[0] >= 0.0
+    for it in a.items:
+        assert 4 <= len(it.tokens) <= 20
+        assert all(0 <= t < 257 for t in it.tokens)
+        assert 3 <= it.max_new_tokens <= 10
+        assert it.priority in (0, 3, 7)
+
+
+def test_bursty_trace_is_burstier_than_poisson():
+    """The MMPP trace's interarrival dispersion (coefficient of variation)
+    exceeds the memoryless trace's — the burst state is actually visited."""
+    def cv(trace):
+        ts = np.array([it.t for it in trace.items])
+        gaps = np.diff(np.concatenate([[0.0], ts]))
+        return gaps.std() / gaps.mean()
+
+    p = poisson_trace(3, 400, vocab=257, mean_interarrival_s=0.002)
+    b = bursty_trace(3, 400, vocab=257, calm_interarrival_s=0.002,
+                     burst_interarrival_s=0.0001)
+    assert cv(b) > cv(p) > 0.5  # exponential CV ≈ 1; MMPP > that
+
+
+# ---------------------------------------------------------------------------
+# Property suite: invariants over seeded random traces × policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name,sched", [("fifo", FIFO),
+                                               ("slo", SLO_POLICY)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scheduler_invariants_under_random_load(served, policy_name, sched,
+                                                seed):
+    """The core property set, checked after EVERY engine step of a random
+    trace: (a) no slot double-assignment — occupied slots hold distinct
+    rids; (b) a rid never occupies two slots; (c) in-flight outputs only
+    ever GROW by appending (accepted prefixes are preserved across
+    preemption/retry); then terminally: (d) exactly one result per
+    submitted rid, and (e) every OK output is token-identical to a solo
+    greedy run of the same request."""
+    cfg, params = served
+    trace = _trace("poisson" if seed % 2 == 0 else "bursty", seed,
+                   cfg.vocab, n=10, priorities=(0, 5))
+    prefixes = {}
+
+    def invariants(eng):
+        rids = [s.rid for s in eng._slots if s.rid is not None]
+        assert len(rids) == len(set(rids)), "slot double-assignment"
+        for s in eng._slots:
+            if s.rid is None or s.prefilling:
+                continue
+            prev = prefixes.get(s.rid, [])
+            assert s.out[:len(prev)] == prev, "accepted prefix mutated"
+            prefixes[s.rid] = list(s.out)
+
+    report = run_trace(
+        _factory(cfg, params, sched, prefill_chunk=8), trace,
+        policy_name, step_hook=invariants,
+    )
+    assert len(report.outcomes) == len(trace)
+    rids = [o["rid"] for o in report.outcomes]
+    assert len(rids) == len(set(rids)), "rid finalised twice"
+    by_rid = {o["rid"]: o for o in report.outcomes}
+    for rid, item in zip(sorted(by_rid), trace.items):
+        o = by_rid[rid]
+        assert o["status"] in {s.value for s in Status}
+        if o["status"] == "ok":
+            assert o["n_tokens"] == item.max_new_tokens
+
+
+@pytest.mark.parametrize("sched", [FIFO, SLO_POLICY],
+                         ids=["fifo", "slo"])
+def test_ok_outputs_token_identical_to_solo(served, sched):
+    """OK outputs under any schedule == solo greedy runs, token for token
+    — continuous batching, priority admission, interleave throttling and
+    preemption may reorder WHEN tokens are produced, never WHICH."""
+    cfg, params = served
+    trace = _trace("poisson", 11, cfg.vocab, n=6, priorities=(0, 5))
+    eng = _engine(cfg, params, prefill_chunk=8, sched=sched)
+    rids = [eng.submit(it.request()) for it in trace.items]
+    results = eng.run(return_results=True)
+    n_ok = 0
+    for rid, item in zip(rids, trace.items):
+        r = results[rid]
+        assert r.status == Status.OK
+        assert np.array_equal(r.tokens, _solo(cfg, params, item))
+        n_ok += 1
+    assert n_ok == len(trace)
+
+
+def test_exactly_one_terminal_result_with_shedding(served):
+    """Every submitted rid — delivered, shed, or expired — reaches exactly
+    one terminal result, and the drain returns each result once."""
+    cfg, params = served
+    trace = _trace("bursty", 5, cfg.vocab, n=14, queue_ttl=0.003,
+                   calm_interarrival_s=0.0001,
+                   burst_interarrival_s=0.00002)
+    report = run_trace(
+        _factory(cfg, params, SLO_POLICY, prefill_chunk=8,
+                 policy=ResiliencePolicy(max_queue=3)),
+        trace, "slo",
+    )
+    assert len(report.outcomes) == len(trace)
+    statuses = [o["status"] for o in report.outcomes]
+    assert statuses.count("rejected") == report.metrics["n_shed"]
+    assert report.metrics["n_shed"] > 0, "trace never overflowed the queue"
+    assert report.metrics["shed_rate"] == pytest.approx(
+        report.metrics["n_shed"] / len(trace), abs=1e-3
+    )
+
+
+def test_poll_drains_each_result_once(served):
+    """``poll`` hands out each terminal result exactly once (a long-lived
+    engine must not accumulate every answer it ever produced)."""
+    cfg, params = served
+    eng = _engine(cfg, params)
+    p = np.arange(1, 7, dtype=np.int32)
+    rid = eng.submit(Request(tokens=p, max_new_tokens=4))
+    seen = []
+    while eng.step():
+        seen += list(eng.poll())
+    seen += list(eng.poll())
+    assert seen == [rid]
+    assert eng.poll() == {}
+
+
+def test_deadline_and_ttl_monotone_under_virtual_clock(served):
+    """Virtual-clock monotonicity: submitted <= first_token <= finished
+    for every delivered request; TIMED_OUT never fires BEFORE its budget;
+    delivered requests observed their deadline headroom at first token."""
+    cfg, params = served
+    trace = _trace("poisson", 2, cfg.vocab, n=10, deadline=0.0015,
+                   queue_ttl=0.001, mean_interarrival_s=0.0002)
+    report = run_trace(_factory(cfg, params, FIFO, prefill_chunk=8),
+                       trace, "fifo")
+    by_rid = {o["rid"]: o for o in report.outcomes}
+    assert any(o["status"] == "timed_out" for o in by_rid.values()), \
+        "trace never hit a deadline — tighten the budgets"
+    for rid, item in zip(sorted(by_rid), trace.items):
+        o = by_rid[rid]
+        sub_us = item.t * 1e6
+        assert o["finished_at_us"] >= sub_us - 1e-6
+        if o["ttft_us"] is not None:
+            assert o["ttft_us"] >= 0.0
+            assert o["finished_at_us"] >= sub_us + o["ttft_us"] - 1e-3
+        if o["status"] == "timed_out":
+            # enforcement at block boundaries: never early
+            assert o["finished_at_us"] >= sub_us + 0.001 * 1e6 - 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Scheduling behaviour: fairness, preemption, interleave, fat chunks
+# ---------------------------------------------------------------------------
+
+
+def test_priority_admission_fixes_head_of_line_starvation(served):
+    """Regression for the FIFO fairness bug: a short high-priority request
+    behind a long chunked head-of-line prefill starves under FIFO (its
+    first token waits for the whole long prompt) but is admitted into the
+    free slot under ``priority_admission`` — pinning the admission order
+    and that BOTH schedules stay token-identical to solo runs."""
+    cfg, params = served
+    rng = np.random.default_rng(0)
+    long_p = rng.integers(0, cfg.vocab, size=40).astype(np.int32)
+    short_p = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+
+    def run(sched):
+        eng = _engine(cfg, params, prefill_chunk=8, sched=sched)
+        a = eng.submit(Request(tokens=long_p, max_new_tokens=12, priority=5))
+        b = eng.submit(Request(tokens=short_p, max_new_tokens=6, priority=0))
+        res = eng.run(return_results=True)
+        return res[a], res[b]
+
+    f_long, f_short = run(FIFO)
+    p_long, p_short = run(SchedulerPolicy(priority_admission=True))
+    # same tokens under both schedules
+    assert np.array_equal(f_long.tokens, p_long.tokens)
+    assert np.array_equal(f_short.tokens, p_short.tokens)
+    # FIFO: short waits behind the 40-token chunked prefill (starved);
+    # priority: short decodes first
+    assert f_short.first_token_at > f_long.first_token_at
+    assert p_short.first_token_at < p_long.first_token_at
+
+
+def test_preemption_state_handoff_token_identity(served):
+    """A preempted slot resumes from its saved state: the low-priority
+    request is evicted mid-decode for a high-priority arrival, resumes
+    WITHOUT re-prefill, and both outputs are token-identical to solo runs
+    (greedy decode makes the handoff contract exactly testable)."""
+    cfg, params = served
+    rng = np.random.default_rng(1)
+    lo_p = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    hi_p = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    eng = _engine(cfg, params, max_slots=1,
+                  sched=SchedulerPolicy(preemption=True))
+    lo = eng.submit(Request(tokens=lo_p, max_new_tokens=10, priority=5))
+    for _ in range(2):
+        eng.step()
+    prefix = list(eng._slots[0].out)
+    assert prefix, "low-priority request never started decoding"
+    hi = eng.submit(Request(tokens=hi_p, max_new_tokens=6, priority=0))
+    res = eng.run(return_results=True)
+    st = eng.stats()
+    assert st["preemptions"] >= 1 and st["resumes"] >= 1
+    assert res[lo].preemptions >= 1
+    assert res[lo].status == Status.OK and res[hi].status == Status.OK
+    assert list(res[lo].tokens[:len(prefix)]) == prefix, \
+        "accepted prefix lost across preemption"
+    for rid, toks, budget in ((lo, lo_p, 10), (hi, hi_p, 6)):
+        solo_eng = _engine(cfg, params, max_slots=1)
+        srid = solo_eng.submit(Request(tokens=toks, max_new_tokens=budget))
+        assert np.array_equal(res[rid].tokens, solo_eng.run()[srid])
+
+
+def test_max_preemptions_bounds_thrash(served):
+    """A request is never bounced more than ``max_preemptions`` times,
+    no matter how many higher-priority arrivals land."""
+    cfg, params = served
+    rng = np.random.default_rng(2)
+    lo_p = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    eng = _engine(cfg, params, max_slots=1,
+                  sched=SchedulerPolicy(preemption=True, max_preemptions=1))
+    lo = eng.submit(Request(tokens=lo_p, max_new_tokens=12, priority=9))
+    for _ in range(2):
+        eng.step()
+    for k in range(3):
+        hi_p = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+        eng.submit(Request(tokens=hi_p, max_new_tokens=3, priority=0))
+        eng.step()
+    res = eng.run(return_results=True)
+    assert res[lo].status == Status.OK
+    assert res[lo].preemptions <= 1
+    assert eng.stats()["preemptions"] <= 1
+
+
+def test_decode_per_prefill_throttles_chunk_feed(served):
+    """With ``decode_per_prefill=3`` and an active decode slot, chunk
+    dispatches of an in-flight long prefill are spaced >= 3 blocks apart
+    (strict alternation under the default is spaced 1 apart)."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    busy_p = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    # 24-token prompt = 3 chunks of 8; the busy slot's 30-token budget
+    # keeps decode active past the last chunk even at 3-block spacing,
+    # so every measured gap is under the throttle (an idle engine feeds
+    # chunks every step by design).
+    long_p = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+
+    def chunk_blocks(sched):
+        eng = _engine(cfg, params, prefill_chunk=8, sched=sched)
+        eng.submit(Request(tokens=busy_p, max_new_tokens=30))
+        eng.step()  # busy slot decoding
+        eng.submit(Request(tokens=long_p, max_new_tokens=4))
+        blocks, last = [], eng.stats()["prefill_dispatches"]
+        while eng.step():
+            n = eng.stats()["prefill_dispatches"]
+            if n > last:
+                blocks.append(eng.stats()["blocks"])
+            last = n
+        return blocks
+
+    strict = chunk_blocks(SchedulerPolicy())
+    spaced = chunk_blocks(SchedulerPolicy(decode_per_prefill=3))
+    assert strict and spaced
+    assert min(np.diff(strict), default=1) == 1
+    assert all(g >= 3 for g in np.diff(spaced))
+
+
+def test_fat_chunks_cut_prefill_dispatches(served):
+    """A deep queue fattens chunks: the same backlog of long prompts
+    admits with strictly fewer prefill dispatches under
+    ``fat_chunk_depth`` than with fixed-size chunks — and identical
+    tokens."""
+    cfg, params = served
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, size=33).astype(np.int32)
+               for _ in range(4)]
+
+    def run(sched):
+        eng = _engine(cfg, params, prefill_chunk=8, sched=sched)
+        rids = [eng.submit(Request(tokens=p, max_new_tokens=3))
+                for p in prompts]
+        res = eng.run()
+        return eng.stats()["prefill_dispatches"], [res[r] for r in rids]
+
+    n_fixed, toks_fixed = run(SchedulerPolicy())
+    n_fat, toks_fat = run(SchedulerPolicy(fat_chunk_depth=2))
+    assert n_fat < n_fixed
+    for a, b in zip(toks_fixed, toks_fat):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Replay determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name,sched", [("fifo", FIFO),
+                                               ("slo", SLO_POLICY)])
+def test_replay_deterministic_single_device(served, policy_name, sched):
+    """Same seed + same policy ⇒ byte-identical report JSON (metrics AND
+    per-request outcome log) across independent engines."""
+    cfg, params = served
+    trace = _trace("bursty", 6, cfg.vocab, n=8, priorities=(0, 5))
+    a = run_trace(_factory(cfg, params, sched, prefill_chunk=8),
+                  trace, policy_name)
+    b = run_trace(_factory(cfg, params, sched, prefill_chunk=8),
+                  trace, policy_name)
+    assert a.to_json() == b.to_json()
+    assert a.metrics["n_requests"] == len(trace)
+    for key in ("ttft_us_p50", "ttft_us_p99", "tok_us_p50", "tok_us_p99"):
+        assert a.metrics[key] is not None and a.metrics[key] >= 0.0
+
+
+def test_replay_deterministic_2x2_mesh_subprocess(served):
+    """The determinism contract holds sharded: on a 2x2 mesh the SLO
+    replay (priority admission + preemption armed) is byte-identical
+    across runs AND byte-identical to the single-device replay — virtual
+    time is priced from dispatch counters, which the mesh path shares."""
+    del served  # subprocess rebuilds its own model
+    code = """
+    import jax, json
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import (SchedulerPolicy, ServeEngine, bursty_trace,
+                             run_trace)
+
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    trace = bursty_trace(6, 8, cfg.vocab, calm_interarrival_s=0.002,
+                         burst_interarrival_s=0.0002, prompt_len=(4, 20),
+                         new_tokens=(3, 10), priorities=(0, 5))
+    sched = SchedulerPolicy(priority_admission=True, decode_per_prefill=2,
+                            fat_chunk_depth=3, preemption=True)
+
+    def factory(mesh):
+        def make(clock):
+            return ServeEngine(params, cfg, max_slots=2, n_max=64,
+                               decode_block=4, prefill_chunk=8,
+                               clock=clock, sched=sched, mesh=mesh)
+        return make
+
+    mesh = make_serve_mesh(2, 2)
+    m1 = run_trace(factory(mesh), trace, "slo").to_json()
+    m2 = run_trace(factory(mesh), trace, "slo").to_json()
+    host = run_trace(factory(None), trace, "slo").to_json()
+    print(json.dumps({"mesh_replay_identical": m1 == m2,
+                      "mesh_matches_single_device": m1 == host}))
+    """
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(_REPO / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(_REPO),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    import json
+    verdict = json.loads(out.stdout.strip().splitlines()[-1])
+    assert verdict["mesh_replay_identical"]
+    assert verdict["mesh_matches_single_device"]
