@@ -1,0 +1,129 @@
+"""Speculative decoding bench: dispatches-per-token below one.
+
+Decode on the O(1) moment state is dispatch-bound (BENCH_load.json), so
+the speculative win is measured in DISPATCHES PER EMITTED TOKEN on a
+per-token dispatch budget (``decode_block=1`` — the honest baseline:
+plain decode pays ~1 dispatch per token).  A fixed seeded greedy
+workload is replayed three ways — plain, n-gram draft, order-1
+self-draft — and each speculative row reports:
+
+  * ``acceptance_rate`` — accepted / drafted tokens (per proposer);
+  * ``dispatches_per_token`` — ALL dispatches (prefill + decode + verify
+    + draft + rollback) over all emitted tokens, ASSERTED ``< 1`` and
+    below the plain baseline — the headline is machine-checked, not
+    eyeballed;
+  * ``tok_per_s`` — virtual-clock throughput priced by ``CostModel``
+    (dispatch overhead + per-token work incl. ``spec_token_us``), so the
+    speedup is machine-independent and byte-reproducible;
+  * ``identical=True`` — every request's tokens were compared against
+    the plain run (the token-identity contract, also property-tested in
+    tests/test_speculative.py).
+
+Rows are aggregated into ``BENCH_speculative.json`` by benchmarks/run.py
+(schema in README.md §Benchmarks; table rendered by render_tables.py).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def _workload(cfg, seed=7, n=4):
+    """Seeded greedy requests, budgets long enough that the reduced
+    model's repetition attractors form (what prompt-lookup drafting
+    exploits — and what real decode tails look like)."""
+    import numpy as np
+
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            tokens=rng.integers(1, cfg.vocab,
+                                size=int(rng.integers(3, 12))).tolist(),
+            max_new_tokens=int(rng.integers(24, 33)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _replay(cfg, params, reqs, sched):
+    """One engine replay; returns (per-request tokens, stats)."""
+    from repro.serve import ServeEngine
+
+    eng = ServeEngine(params, cfg, max_slots=2, n_max=64, decode_block=1,
+                      sched=sched)
+    rids = [eng.submit(r) for r in reqs]
+    res = eng.run()
+    return [list(res[r]) for r in rids], eng.stats()
+
+
+def run():
+    """Executes the speculative replays + machine asserts.
+
+    Returns:
+      List of ``name,us,derived`` CSV row strings for run.py aggregation.
+    """
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.serve import CostModel, SchedulerPolicy
+
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _workload(cfg)
+    cost = CostModel()
+
+    def totals(stats, toks):
+        n_tok = sum(len(t) for t in toks)
+        virtual_us = cost.step_cost_us({}, stats)
+        return n_tok, virtual_us, stats["dispatches"] / n_tok
+
+    plain_toks, plain_st = _replay(cfg, params, reqs, SchedulerPolicy())
+    n_tok, plain_us, plain_dpt = totals(plain_st, plain_toks)
+    rows = [emit(
+        "spec_plain", plain_us,
+        f"dispatches_per_token={plain_dpt:.3f};"
+        f"tok_per_s={n_tok / (plain_us * 1e-6):.0f};"
+        f"tokens={n_tok};dispatches={plain_st['dispatches']}",
+    )]
+
+    for draft in ("ngram", "order1"):
+        sched = SchedulerPolicy(speculative_k=4, speculative_draft=draft)
+        toks, st = _replay(cfg, params, reqs, sched)
+        identical = toks == plain_toks
+        assert identical, f"{draft}: speculative output diverged from plain"
+        n_tok, us, dpt = totals(st, toks)
+        accept = st["spec_accepted"] / max(st["spec_drafted"], 1)
+        # The headline, machine-checked: strictly under one dispatch per
+        # token AND strictly under the plain baseline.
+        assert dpt < 1.0, f"{draft}: dispatches_per_token={dpt:.3f} >= 1"
+        assert dpt < plain_dpt, (
+            f"{draft}: {dpt:.3f} not below plain {plain_dpt:.3f}"
+        )
+        rows.append(emit(
+            f"spec_{draft}", us,
+            f"acceptance_rate={accept:.3f};"
+            f"dispatches_per_token={dpt:.3f};"
+            f"plain_dispatches_per_token={plain_dpt:.3f};"
+            f"tok_per_s={n_tok / (us * 1e-6):.0f};"
+            f"plain_tok_per_s={n_tok / (plain_us * 1e-6):.0f};"
+            f"full_accepts={st['spec_full_accepts']};"
+            f"rollbacks={st['spec_rollbacks']};"
+            f"spec_rounds={st['spec_rounds']};"
+            f"identical={identical}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    import pathlib
+
+    from benchmarks.run import _parse_rows
+
+    rows = run()
+    out = pathlib.Path(__file__).parent / "BENCH_speculative.json"
+    out.write_text(json.dumps(_parse_rows(rows), indent=2) + "\n")
+    print(f"# wrote {out}")

@@ -11,10 +11,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_serve_sharded — mesh-sharded engine parity/overhead + chunked prefill
   bench_resilience   — goodput/recovery under the standard fault trace
   bench_load         — arrival traces × scheduler policies (virtual clock)
+  bench_speculative  — draft/verify decoding: dispatches-per-token < 1
 
 Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json``,
 ``BENCH_serve.json``, ``BENCH_serve_sharded.json``,
-``BENCH_resilience.json`` and ``BENCH_load.json`` (name ->
+``BENCH_resilience.json``, ``BENCH_load.json`` and
+``BENCH_speculative.json`` (name ->
 {us_per_call, derived}) next to this file so the backend, kernel and
 serving perf trajectories are machine-readable across PRs, not just
 printed.  Schema documented in README.md §Benchmarks; the README tables
@@ -51,6 +53,7 @@ def main() -> None:
         bench_resilience,
         bench_serve,
         bench_serve_sharded,
+        bench_speculative,
     )
 
     print("name,us_per_call,derived")
@@ -58,10 +61,11 @@ def main() -> None:
     failures = []
     json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {},
                  "bench_serve_sharded": {}, "bench_resilience": {},
-                 "bench_load": {}}
+                 "bench_load": {}, "bench_speculative": {}}
     for mod in (bench_approx, bench_complexity, bench_attention, bench_kernel,
                 bench_longcontext, bench_quality, bench_serve,
-                bench_serve_sharded, bench_resilience, bench_load):
+                bench_serve_sharded, bench_resilience, bench_load,
+                bench_speculative):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
@@ -76,7 +80,8 @@ def main() -> None:
                            ("bench_serve", "BENCH_serve.json"),
                            ("bench_serve_sharded", "BENCH_serve_sharded.json"),
                            ("bench_resilience", "BENCH_resilience.json"),
-                           ("bench_load", "BENCH_load.json")):
+                           ("bench_load", "BENCH_load.json"),
+                           ("bench_speculative", "BENCH_speculative.json")):
         if json_rows[name]:
             out_path = pathlib.Path(__file__).parent / out_name
             out_path.write_text(json.dumps(json_rows[name], indent=2) + "\n")

@@ -97,6 +97,26 @@ class AttentionBackend:
             return cfg.attn_impl
         return self.impls[0]
 
+    def draft_config(self, cfg):
+        """Cheaper same-weights config for speculative self-drafting.
+
+        The order hierarchy the paper introduces gives some backends a
+        natural draft model sharing the target's weights: the Taylor
+        backend drops the order-2 moment terms (``S2``/``z2``) and drafts
+        with the order-1 feature map.  Returns the draft ``ModelConfig``
+        (same params, lighter per-slot state) or ``None`` when this
+        backend has no cheap self-draft — the serve layer then rejects
+        ``draft="order1"`` requests at submit time
+        (docs/serving.md §Speculative decoding).
+
+        Args:
+          cfg: the target model config.
+
+        Returns:
+          A draft ``ModelConfig`` or ``None``.
+        """
+        return None
+
     # -- protocol: full-sequence / prefill / decode / state -----------------
 
     def init_cache(self, cfg, batch: int, n_max: int, dtype) -> Any:

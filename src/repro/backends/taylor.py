@@ -24,6 +24,8 @@ single-exchange context parallelism of ``core/context_parallel.py`` work.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.backends.base import AttentionBackend
@@ -110,6 +112,28 @@ class TaylorBackend(AttentionBackend):
         if jax.default_backend() == "tpu" and _pallas_fits(cfg):
             return "pallas"
         return "xla"
+
+    def draft_config(self, cfg):
+        """Order-1 same-weights self-draft (the paper's order hierarchy).
+
+        Drops the second-moment terms from the feature map — the draft
+        state is ``(n0, s0, z1, s1)`` only, a large per-slot memory and
+        FLOP cut — while reusing the target's weights verbatim (the
+        Taylor feature map is parameter-free).  ``None`` when the target
+        is already order 1 (no cheaper order below it).
+
+        Args:
+          cfg: the target model config.
+
+        Returns:
+          ``cfg`` with ``taylor.order = 1`` (``attn_impl`` forced to
+          "xla": decode/prefill drive the XLA moment paths), or ``None``.
+        """
+        if cfg.taylor.order < 2:
+            return None
+        return cfg.replace(
+            taylor=dataclasses.replace(cfg.taylor, order=1), attn_impl="xla"
+        )
 
     # -- protocol ------------------------------------------------------------
 

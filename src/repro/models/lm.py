@@ -320,6 +320,13 @@ def lm_prefill_chunk(
     Returns:
       ``(logits [b, vocab]`` of the chunk's LAST token``, new caches)``.
     """
+    x, new = _chunk_hidden(params, tokens, caches, pos0, cfg)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
+    return logits, new
+
+
+def _chunk_hidden(params, tokens, caches, pos0, cfg: ModelConfig):
+    """Shared chunk-advance body: hidden states [b, c, d] + new caches."""
     dtype = jnp.dtype(cfg.dtype)
     b, c = tokens.shape
     positions = (
@@ -370,10 +377,40 @@ def lm_prefill_chunk(
         p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
         x, cch = block_prefill_chunk(p, kind, x, caches["tail"][i], cfg, positions)
         tail_caches.append(cch)
-    logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
     new = {"group": group_caches, "tail": tuple(tail_caches),
            "kv_src": caches.get("kv_src")}
-    return logits, new
+    return x, new
+
+
+def lm_verify_chunk(
+    params, tokens: Array, caches, pos0, cfg: ModelConfig
+) -> Tuple[Array, Any]:
+    """Advance the decode caches by a chunk, returning EVERY position's logits.
+
+    The speculative-verify primitive: identical state roll-forward to
+    ``lm_prefill_chunk`` (same chunk math, so the returned caches are the
+    state token-by-token decode would have built), but the logits head is
+    applied to all ``c`` positions instead of only the last one.  The
+    caller compares ``argmax(logits[:, j])`` against the drafted token at
+    position ``j + 1`` to find the longest greedy-matching prefix — one
+    dispatch verifies k proposed tokens (docs/serving.md §Speculative
+    decoding).
+
+    Args:
+      params: model params.
+      tokens: ``[b, c]`` int32 window — last emitted token followed by
+        the ``c - 1`` drafted tokens.
+      caches: cache pytree whose state has absorbed positions
+        ``[0, pos0)``.
+      pos0: scalar or ``[b]`` int32 absolute position of ``tokens[:, 0]``.
+      cfg: model config.
+
+    Returns:
+      ``(logits [b, c, vocab]`` for every window position``, new caches)``
+      — the caches have absorbed all ``c`` window tokens.
+    """
+    x, new = _chunk_hidden(params, tokens, caches, pos0, cfg)
+    return _logits(params, x, cfg), new
 
 
 def lm_decode_step(

@@ -17,6 +17,12 @@ interleave ratios, fat chunked-prefill chunks, and preemption with state
 handoff; ``load.py`` (``poisson_trace``/``bursty_trace``/``run_trace``)
 replays seeded arrival traces under a virtual clock for
 ``benchmarks/bench_load.py``.
+
+Speculative decoding (docs/serving.md §Speculative decoding): with
+``SchedulerPolicy(speculative_k=k)`` greedy slots draft ``k`` tokens per
+round (``NgramProposer`` or the order-1 ``Order1SelfDraft``) and verify
+them in one chunked dispatch on the O(1) moment state — token-identical
+to plain decode, fewer dispatches per token.
 """
 
 from repro.serve.engine import (
@@ -64,19 +70,33 @@ from repro.serve.slots import (
     corrupt_slot,
     init_slot_caches,
     read_slot,
+    select_slots,
     slot_bytes,
     slot_cache_shardings,
     slot_health,
     write_slot,
 )
+from repro.serve.speculative import (
+    DraftProposer,
+    NgramProposer,
+    Order1SelfDraft,
+    Speculator,
+    draft_available,
+    has_proposer,
+    proposer_names,
+    register_proposer,
+)
 
 __all__ = [
     "CostModel",
     "DispatchFailure",
+    "DraftProposer",
     "FaultPlan",
     "InjectedDispatchError",
     "InjectedFault",
     "LoadReport",
+    "NgramProposer",
+    "Order1SelfDraft",
     "PrefillStall",
     "QueueFlood",
     "QueueOverflow",
@@ -88,6 +108,7 @@ __all__ = [
     "SchedulerPolicy",
     "ServeEngine",
     "SlotCorruption",
+    "Speculator",
     "Status",
     "Trace",
     "TraceItem",
@@ -97,15 +118,20 @@ __all__ = [
     "corrupt_slot",
     "decode_scan",
     "decode_step",
+    "draft_available",
     "generate",
     "generate_loop",
+    "has_proposer",
     "init_slot_caches",
     "poisson_trace",
     "prefill",
     "prefill_chunked",
+    "proposer_names",
     "read_slot",
+    "register_proposer",
     "run_trace",
     "sample_tokens",
+    "select_slots",
     "slot_bytes",
     "slot_cache_shardings",
     "slot_health",

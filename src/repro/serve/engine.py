@@ -217,6 +217,8 @@ def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int
     single-device and mesh-sharded compilations."""
 
     def scan_fn(params, caches, token, pos, active, temperature, top_k, eos_id, rng):
+        caches_in, active_in = caches, active
+
         def body(carry, _):
             token, caches, pos, active, rng = carry
             logits, caches = lm_decode_step(params, token, caches, pos, cfg)
@@ -239,6 +241,15 @@ def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int
         (token, caches, pos, active, rng), (toks, mask) = jax.lax.scan(
             body, (token, caches, pos, active, rng), None, length=steps
         )
+        # Slots inactive at DISPATCH time keep their pre-dispatch state
+        # bit-identically.  Before speculative decoding, inactive regions
+        # were always dead (free/retired) and their scan churn harmless;
+        # a speculative slot advanced by a verify this block is LIVE while
+        # excluded from the decode mask, so the churn must be undone.
+        # One fused select per leaf per dispatch (not per scan step).
+        from repro.serve.slots import select_slots  # noqa: PLC0415
+
+        caches = select_slots(active_in, caches, caches_in)
         return caches, token, pos, active, rng, toks, mask
 
     return scan_fn

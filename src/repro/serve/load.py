@@ -91,9 +91,17 @@ class CostModel:
     how many dispatches they spend per token served.
 
     Attributes:
-      dispatch_us: cost per device round-trip (decode block or prefill).
+      dispatch_us: cost per device round-trip (decode block, prefill,
+        speculative verify/draft/rollback — every dispatch the engine
+        counts in ``stats()["dispatches"]`` is priced identically, which
+        is what makes speculative and plain rows comparable).
       decode_token_us: cost per accepted decode token.
       prefill_token_us: cost per prefilled prompt token.
+      spec_token_us: cost per speculative window token absorbed — verify
+        windows, rollback re-absorbs (``verify_tokens``) and order-1
+        draft catch-up/scan tokens (``draft_tokens``).  Chunk-parallel
+        like prefill but over the full slotted batch, so priced between
+        the prefill and decode per-token rates.
       step_floor_us: minimum cost of any engine step (host bookkeeping) —
         guarantees the virtual clock always advances.
     """
@@ -101,6 +109,7 @@ class CostModel:
     dispatch_us: float = 100.0
     decode_token_us: float = 1.0
     prefill_token_us: float = 0.25
+    spec_token_us: float = 0.5
     step_floor_us: float = 1.0
 
     def step_cost_us(self, before: Dict[str, int],
@@ -113,7 +122,8 @@ class CostModel:
             self.step_floor_us,
             self.dispatch_us * d("dispatches")
             + self.decode_token_us * d("decode_tokens")
-            + self.prefill_token_us * d("prefill_tokens"),
+            + self.prefill_token_us * d("prefill_tokens")
+            + self.spec_token_us * (d("verify_tokens") + d("draft_tokens")),
         )
 
 
@@ -460,7 +470,16 @@ def _report(trace: Trace, policy_label: str, results, stats: Dict[str, int],
             slo_ok_tokens += n_tok
     n = len(results)
     dispatches = stats.get("dispatches", 0)
-    tokens_out = stats.get("decode_tokens", 0) + delivered  # + first tokens
+    # Every emitted token enters the denominator exactly once, whichever
+    # path produced it: plain decode blocks (``decode_tokens``),
+    # speculative verify rounds (``spec_tokens``), plus each delivered
+    # request's first token (sampled from prefill logits).  ``dispatches``
+    # already counts verify/draft/rollback dispatches, so the speculative
+    # and plain rows of the load table are directly comparable — and the
+    # plain path (zero spec counters) is byte-unchanged, pinned against
+    # BENCH_load.json by tests/test_speculative.py.
+    tokens_out = (stats.get("decode_tokens", 0)
+                  + stats.get("spec_tokens", 0) + delivered)
     metrics = {
         "n_requests": n,
         "n_delivered": delivered,

@@ -40,6 +40,11 @@ Two orthogonal extensions (docs/serving.md):
 * ``prefill_chunk=`` admits long prompts chunk-by-chunk (a PREFILLING
   slot is reserved and fed one chunk per engine step), so admission
   interleaves with in-flight decode instead of stalling it.
+* ``SchedulerPolicy.speculative_k`` / ``Request.speculative_k`` turn on
+  speculative decoding (``serve/speculative.py``): greedy slots draft k
+  tokens per round and verify them in one chunked dispatch, co-batched
+  with plain decode/prefill — token-identical by construction
+  (docs/serving.md §Speculative decoding).
 """
 
 from __future__ import annotations
@@ -60,6 +65,7 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.serve import engine as engine_mod
 from repro.serve import slots as slots_mod
+from repro.serve import speculative as spec_mod
 from repro.serve.engine import (
     _jitted_prefill,
     _jitted_prefill_chunk,
@@ -132,6 +138,7 @@ class RequestRejected(ValueError):
     Attributes:
       reason: machine-readable code (``empty_prompt``, ``bad_budget``,
         ``prompt_too_long``, ``over_capacity``, ``bad_extras``,
+        ``bad_speculative_k``, ``unknown_draft``, ``draft_unavailable``,
         ``queue_full``).
       rid: request id under which the engine recorded the ``REJECTED``
         ``RequestResult`` (for terminal-status audits).
@@ -231,6 +238,16 @@ class SchedulerPolicy:
       max_preemptions: per-request preemption bound (prevents a stream of
         high-priority arrivals from starving a low-priority request
         forever).
+      speculative_k: engine-wide speculative-decoding depth — greedy slots
+        draft k tokens per round and verify them in ONE chunked dispatch
+        (``serve/speculative.py``; docs/serving.md §Speculative decoding).
+        0 (the default) disables speculation; ``Request.speculative_k``
+        overrides per request.  Sampled requests always decode plainly.
+      speculative_draft: default draft proposer name (``"ngram"`` — the
+        weight-free prompt-lookup baseline — or ``"order1"``, the
+        same-weights order-1 self-draft on backends whose
+        ``draft_config`` provides one).  ``Request.draft`` overrides per
+        request; unknown names are rejected at submit time.
     """
 
     priority_admission: bool = False
@@ -240,6 +257,8 @@ class SchedulerPolicy:
     preemption: bool = False
     preempt_min_tokens: int = 1
     max_preemptions: int = 2
+    speculative_k: int = 0
+    speculative_draft: str = "ngram"
 
 
 @dataclasses.dataclass
@@ -268,6 +287,14 @@ class Request:
         Ignored by the default FIFO scheduler; with
         ``SchedulerPolicy.priority_admission`` it orders admission and
         (with ``preemption``) can evict strictly lower-priority slots.
+      speculative_k: per-request speculative depth override (None =
+        ``SchedulerPolicy.speculative_k``).  Explicit values must be in
+        ``[1, max_new_tokens]`` — rejected otherwise.  Only greedy
+        requests (temperature 0) speculate; see
+        docs/serving.md §Speculative decoding.
+      draft: per-request draft proposer name (None = policy
+        ``speculative_draft``).  Must name a registered proposer usable
+        on this engine's backend — rejected otherwise.
     """
 
     tokens: np.ndarray
@@ -279,6 +306,8 @@ class Request:
     deadline: Optional[float] = None
     queue_ttl: Optional[float] = None
     priority: int = 0
+    speculative_k: Optional[int] = None
+    draft: Optional[str] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -442,6 +471,21 @@ class ServeEngine:
         self.sched = sched if sched is not None else SchedulerPolicy()
         if self.sched.decode_per_prefill < 1:
             raise ValueError("decode_per_prefill must be >= 1")
+        if self.sched.speculative_k < 0:
+            raise ValueError("speculative_k must be >= 0 (0 = off)")
+        if self.sched.speculative_k > 0:
+            if not spec_mod.has_proposer(self.sched.speculative_draft):
+                raise ValueError(
+                    f"unknown speculative_draft "
+                    f"{self.sched.speculative_draft!r}; registered: "
+                    f"{spec_mod.proposer_names()}"
+                )
+            if not spec_mod.draft_available(cfg, self.sched.speculative_draft):
+                raise ValueError(
+                    f"draft {self.sched.speculative_draft!r} is not "
+                    f"available on the {cfg.attention!r} backend (no "
+                    f"draft_config)"
+                )
         self.fault_plan = fault_plan
         self._clock = clock if clock is not None else time.monotonic
         self.mesh = mesh
@@ -493,6 +537,7 @@ class ServeEngine:
         self._temp = np.zeros((max_slots,), np.float32)
         self._topk = np.zeros((max_slots,), np.int32)
         self._eos = np.full((max_slots,), -1, np.int32)
+        self._spec = spec_mod.Speculator(self)
 
     # -- mesh helpers -------------------------------------------------------
 
@@ -682,6 +727,37 @@ class ServeEngine:
                     f"configured source length",
                     reason="bad_extras",
                 )
+        # Speculative knobs (docs/serving.md §Speculative decoding): an
+        # explicit per-request depth must be usable, and a draft name must
+        # resolve in the proposer registry for THIS engine's backend.
+        if request.speculative_k is not None:
+            if request.speculative_k <= 0:
+                raise RequestRejected(
+                    f"speculative_k must be >= 1 when set, got "
+                    f"{request.speculative_k} (omit it to disable "
+                    f"speculation)",
+                    reason="bad_speculative_k",
+                )
+            if request.speculative_k > request.max_new_tokens:
+                raise RequestRejected(
+                    f"speculative_k ({request.speculative_k}) exceeds "
+                    f"max_new_tokens ({request.max_new_tokens}) — the "
+                    f"draft window can never fit the budget",
+                    reason="bad_speculative_k",
+                )
+        if request.draft is not None:
+            if not spec_mod.has_proposer(request.draft):
+                raise RequestRejected(
+                    f"unknown draft proposer {request.draft!r}; "
+                    f"registered: {spec_mod.proposer_names()}",
+                    reason="unknown_draft",
+                )
+            if not spec_mod.draft_available(self.cfg, request.draft):
+                raise RequestRejected(
+                    f"draft {request.draft!r} is not available on the "
+                    f"{self.cfg.attention!r} backend (no draft_config)",
+                    reason="draft_unavailable",
+                )
 
     # -- terminal outcomes --------------------------------------------------
 
@@ -713,6 +789,7 @@ class ServeEngine:
                 self.caches, jnp.asarray(idx, jnp.int32)
             )
         self._slots[idx] = _Slot()
+        self._spec.on_release(idx)
 
     def _requeue_for_retry(self, rid: int, accepted: List[int],
                            error: str) -> None:
@@ -824,6 +901,8 @@ class ServeEngine:
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         if req.eos_id is not None and first == req.eos_id:
             st.done = True
+        if not st.done and st.remaining > 0:
+            self._spec.on_install(slot, tr, st.out)
 
     def _chunk_for(self, tr: _Tracked) -> Optional[int]:
         """Effective prefill-chunk size for one request, fattened by a
@@ -929,6 +1008,7 @@ class ServeEngine:
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         tr.saved_state = None
         self._stats["resumes"] += 1
+        self._spec.on_resume(slot, tr)
 
     def _preempt(self) -> None:
         """Evict at most one over-budget low-priority slot per block.
@@ -1160,6 +1240,7 @@ class ServeEngine:
         self._temp[:] = 0.0
         self._topk[:] = 0
         self._eos[:] = -1
+        self._spec.on_rebuild()
 
     def _inject_corruptions(self) -> None:
         """Apply due ``SlotCorruption`` events (fault plan) to the live
@@ -1212,6 +1293,7 @@ class ServeEngine:
                 self._stats["quarantined"] += 1
                 rid, out = st.rid, list(st.out)
                 self._slots[i] = _Slot()
+                self._spec.on_release(i)
                 self._requeue_for_retry(
                     rid, out, "slot state corrupted (quarantined)"
                 )
@@ -1221,6 +1303,7 @@ class ServeEngine:
                 tr = self._requests.get(st.rid)
                 self._finalize(st.rid, self._success_status(tr), st.out)
                 self._slots[i] = _Slot()
+                self._spec.on_release(i)
             # prefilling slots keep their reservation: the partial's
             # batch-1 caches live outside the slot cache
             with self._device_ctx():
@@ -1258,8 +1341,22 @@ class ServeEngine:
         self._release_retries()
         self._preempt()
         self._admit()
+        # Speculative rounds run BEFORE the decode block: due greedy slots
+        # draft + verify (one chunked dispatch per depth) and are excluded
+        # from this block's active mask — the decode scan preserves
+        # inactive slots' state bit-identically, so speculative and plain
+        # slots co-batch without interference.
+        spec_handled = self._spec.run_rounds()
         active = self._active_mask()
+        for i in spec_handled:
+            active[i] = False
         if not active.any():
+            if spec_handled:
+                # All live work advanced via verify this step — the
+                # corruption/health machinery must still run at the block
+                # boundary (quarantine of speculating slots is tested).
+                self._inject_corruptions()
+                self._health_sweep()
             self._retire_finished()
             return self._has_work()
         steps = min(
@@ -1314,6 +1411,7 @@ class ServeEngine:
                 continue
             if not active[i]:
                 continue
+            emitted_from = len(st.out)
             for t in range(toks.shape[0]):
                 if not mask[t, i] or st.remaining <= 0:
                     break
@@ -1323,6 +1421,9 @@ class ServeEngine:
                 if self._eos[i] >= 0 and toks[t, i] == self._eos[i]:
                     st.done = True
                     break
+            # A speculating slot decodes its final <= k tokens plainly —
+            # keep its host-side draft context in sync.
+            self._spec.on_decode_tokens(i, st.out[emitted_from:])
             if not dev_active[i]:
                 st.done = True
         self._inject_corruptions()
@@ -1384,6 +1485,16 @@ class ServeEngine:
         ``prefill_dispatches``/``prefill_tokens`` (the
         dispatches-per-token numerator/denominators ``bench_load``
         reports); scheduling: ``preemptions``, ``resumes``.
+        Speculative decoding (docs/serving.md §Speculative decoding):
+        ``spec_rounds``/``verify_dispatches`` (verify chunk dispatches),
+        ``verify_tokens`` (window tokens absorbed, including rollback
+        re-absorbs), ``spec_tokens`` (tokens EMITTED via verify — the
+        extra ``dispatches_per_token`` denominator next to
+        ``decode_tokens``), ``spec_drafted``/``spec_accepted`` (the
+        acceptance-rate ratio), ``spec_full_accepts``,
+        ``spec_rollbacks``, and ``draft_dispatches``/``draft_tokens``
+        (order-1 self-draft cost; the n-gram proposer is host-side and
+        adds none).
         Gauges: ``blocks`` (decode-block counter), ``queue_depth``
         (queued + awaiting retry), ``slots_occupied``.
 

@@ -242,6 +242,45 @@ def read_slot(caches, slot: Array):
     return _read_slot_impl(caches, slot)
 
 
+def select_slots(mask, new, old):
+    """Per-slot tree-select between two slotted cache pytrees.
+
+    The speculative-verify guard: a verify dispatch runs the chunk pass
+    over the FULL slotted batch, so slots that are not speculating this
+    round would have their state churned by the window's dead rows.
+    ``select_slots(mask, new, old)`` keeps ``new`` only where ``mask`` is
+    True and the pre-dispatch ``old`` leaves elsewhere — non-speculative
+    co-batched slots stay bit-identical (tested in
+    tests/test_speculative.py).  Traced inside the verify jit, so it
+    costs one fused ``where`` per leaf.
+
+    Args:
+      mask: ``[slots]`` bool — True where ``new`` should win.
+      new: slotted cache pytree (post-chunk state).
+      old: slotted cache pytree (pre-dispatch state), same structure.
+
+    Returns:
+      A slotted cache pytree mixing ``new`` and ``old`` per slot.
+    """
+
+    def sel(axis):
+        def f(n, o):
+            shape = [1] * n.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), n, o)
+
+        return f
+
+    out = {
+        "group": jax.tree.map(sel(GROUP_SLOT_AXIS), new["group"], old["group"]),
+        "tail": jax.tree.map(sel(TAIL_SLOT_AXIS), new["tail"], old["tail"]),
+        "kv_src": None,
+    }
+    if new.get("kv_src") is not None:
+        out["kv_src"] = sel(TAIL_SLOT_AXIS)(new["kv_src"], old["kv_src"])
+    return out
+
+
 def slot_health(caches, cfg: ModelConfig) -> Array:
     """Per-slot health of the whole slotted cache (corruption sweep).
 

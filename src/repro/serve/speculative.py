@@ -1,0 +1,724 @@
+"""Speculative decoding on the O(1) Taylor moment state.
+
+The paper's order-2 Taylor attention keeps a constant-size recurrent state
+(running moments), which makes draft-and-verify unusually cheap: verifying
+k proposed tokens is ONE chunked state roll-forward through the existing
+``prefill_chunk`` machinery — a parallel intra-chunk tile plus a moment
+update — instead of k sequential full-model decode dispatches.  Decode is
+dispatch-dominated (BENCH_load.json), so accepted drafts directly cut
+``dispatches_per_token`` below 1 (BENCH_speculative.json).
+
+The round, per speculating slot at position ``p`` with pending token ``t``:
+
+  1. A ``DraftProposer`` guesses ``d_1..d_k`` (the tokens for positions
+     ``p+1..p+k``).
+  2. The slot's pre-round state is snapshotted with ``read_slot`` (O(1)
+     bytes on the taylor backend — the PR 7 preemption handoff).
+  3. ONE verify dispatch feeds the window ``[t, d_1..d_k]`` at positions
+     ``p..p+k`` through ``lm_verify_chunk`` over the full slotted batch
+     (non-speculating co-batched slots are kept bit-identical by
+     ``select_slots``), returning every window position's greedy argmax
+     ``g_0..g_k``.
+  4. The longest prefix with ``d_j == g_{j-1}`` (length ``m``) is
+     accepted; the slot emits ``g_0..g_m`` — the m matched drafts plus
+     one correction/bonus token.  Every emitted token equals what plain
+     greedy decode would have produced, so speculative output is
+     token-identical by construction (property-tested).
+  5. ``m == k``: the verify's rolled-forward state is exactly the state
+     token-by-token decode would have built — zero extra work.
+     ``m < k``: the state absorbed rejected drafts, so the accepted
+     window prefix is re-absorbed from the snapshot (one chunk dispatch)
+     and spliced back with ``write_slot`` — zero-recompute rollback, no
+     re-prefill.
+
+Two proposers ship (module registry, extensible via
+``register_proposer``):
+
+  * ``"ngram"`` — weight-free prompt/history n-gram lookup (host-side,
+    ZERO extra dispatches): the continuation of the most recent previous
+    occurrence of the current suffix n-gram.
+  * ``"order1"`` — the paper's order hierarchy as a same-weights
+    self-draft: the backend's ``draft_config`` drops the second-moment
+    terms, and a lightweight order-1 moment state per slot drafts k
+    tokens in one fused catch-up + scan dispatch.
+
+Policy surface: ``SchedulerPolicy.speculative_k`` / ``speculative_draft``
+engine-wide, ``Request.speculative_k`` / ``Request.draft`` per request
+(greedy requests only — sampled slots fall back to plain decode).  See
+docs/serving.md §Speculative decoding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Set, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import resolve_backend
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_decode_step, lm_prefill_chunk, lm_verify_chunk
+from repro.serve import engine as engine_mod
+from repro.serve import slots as slots_mod
+
+Array = jax.Array
+
+__all__ = [
+    "DraftProposer",
+    "NgramProposer",
+    "Order1SelfDraft",
+    "Speculator",
+    "draft_available",
+    "has_proposer",
+    "proposer_names",
+    "register_proposer",
+]
+
+
+# -- compiled speculative dispatches ----------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_verify(cfg: ModelConfig, width: int):
+    """Compiled verify over the full slotted batch (single-device).
+
+    ``(params, caches, window [s, width], pos0 [s], mask [s]) ->
+    (new caches, greedy [s, width])`` — the chunk pass absorbs every
+    window token into masked slots' state (``select_slots`` keeps the
+    others bit-identical) and returns per-position argmax for the
+    accept-prefix comparison.  Caches donated: the verify fully replaces
+    them every round."""
+    return jax.jit(
+        functools.partial(_verify_impl, cfg=cfg), donate_argnums=(1,)
+    )
+
+
+def _verify_impl(params, caches, window, pos0, mask, *, cfg):
+    logits, new = lm_verify_chunk(params, window, caches, pos0, cfg)
+    new = slots_mod.select_slots(mask, new, caches)
+    return new, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_draft_propose(cfg: ModelConfig, width: int, k: int):
+    """Compiled fused draft round for the order-1 self-draft.
+
+    One dispatch per catch-up width: chunk-absorb the ``width`` tokens the
+    draft state is behind (its last logits give ``d_1``), then ``k - 1``
+    unrolled order-1 decode steps produce ``d_2..d_k``.  Only the POST
+    CATCH-UP state is kept (the scan's drafted-token churn is discarded
+    in-jit), so the draft never needs a rollback — the next round's
+    catch-up absorbs exactly the accepted tokens.  Not donated: the draft
+    state is O(1) per slot and survives a failed dispatch untouched."""
+    return jax.jit(functools.partial(_draft_propose_impl, cfg=cfg, k=k))
+
+
+def _draft_propose_impl(params, caches, window, pos0, mask, *, cfg, k):
+    logits, absorbed = lm_prefill_chunk(params, window, caches, pos0, cfg)
+    d = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    drafts = [d]
+    cur = absorbed
+    posv = pos0 + window.shape[1]
+    for _ in range(k - 1):
+        lg, cur = lm_decode_step(params, d, cur, posv, cfg)
+        d = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        drafts.append(d)
+        posv = posv + 1
+    new = slots_mod.select_slots(mask, absorbed, caches)
+    return new, jnp.stack(drafts, axis=1)
+
+
+# -- proposer protocol + registry -------------------------------------------
+
+
+class DraftProposer:
+    """Protocol for speculative draft proposers.
+
+    A proposer guesses the next k tokens of a speculating slot; the
+    engine's verify dispatch then accepts the longest greedy-matching
+    prefix, so a proposer can be arbitrarily wrong without affecting
+    output correctness — only the acceptance rate (and therefore
+    dispatches-per-token) suffers.  One instance per engine, created by
+    the factory registered under ``name``; lifecycle hooks keep any
+    per-slot draft state in sync with the scheduler's slot reuse,
+    preemption and quarantine.
+
+    Class attributes:
+      name: registry key (``Request.draft`` / policy ``speculative_draft``).
+      requires_backend_draft: True when the proposer needs the backend's
+        ``draft_config`` hook (e.g. the order-1 self-draft) — submit-time
+        validation rejects it on backends that return None.
+    """
+
+    name: str = ""
+    requires_backend_draft: bool = False
+
+    def __init__(self, spec: "Speculator"):
+        """Binds the proposer to one engine's ``Speculator``.
+
+        Args:
+          spec: the owning ``Speculator`` (engine access + host contexts).
+        """
+        self.spec = spec
+
+    def propose(self, slot_ids: List[int], k: int) -> np.ndarray:
+        """Draft k tokens for each requested slot.
+
+        Args:
+          slot_ids: slot indices to draft for (all currently due).
+          k: tokens to propose per slot.
+
+        Returns:
+          ``[len(slot_ids), k]`` int32 drafted tokens, row-aligned with
+          ``slot_ids``.
+        """
+        raise NotImplementedError(self.name)
+
+    def on_install(self, slot: int) -> None:
+        """A speculating request was installed/resumed into ``slot`` (its
+        host context ``spec.ctx(slot)`` is already current)."""
+
+    def on_release(self, slot: int) -> None:
+        """``slot`` was released (retire / preemption / quarantine) — drop
+        any per-slot draft state."""
+
+    def on_rebuild(self) -> None:
+        """The engine rebuilt its caches after a dispatch loss — all
+        per-slot draft state is stale and must be dropped."""
+
+
+_PROPOSERS: Dict[str, Type[DraftProposer]] = {}
+
+
+def register_proposer(cls: Type[DraftProposer]) -> Type[DraftProposer]:
+    """Register a ``DraftProposer`` class under its ``name``.
+
+    The registry backs submit-time validation (unknown draft names are
+    rejected with a typed ``RequestRejected``) and per-engine lazy
+    instantiation.  Usable as a class decorator.
+
+    Args:
+      cls: proposer class with a non-empty ``name``.
+
+    Returns:
+      ``cls`` unchanged.
+    """
+    if not cls.name:
+        raise ValueError("DraftProposer subclasses must set a name")
+    _PROPOSERS[cls.name] = cls
+    return cls
+
+
+def proposer_names() -> Tuple[str, ...]:
+    """Registered draft proposer names (sorted).
+
+    Returns:
+      Tuple of registry keys, e.g. ``("ngram", "order1")``.
+    """
+    return tuple(sorted(_PROPOSERS))
+
+
+def has_proposer(name: str) -> bool:
+    """Whether ``name`` is a registered draft proposer.
+
+    Args:
+      name: proposer registry key.
+
+    Returns:
+      True when registered.
+    """
+    return name in _PROPOSERS
+
+
+def draft_available(cfg: ModelConfig, name: str) -> bool:
+    """Whether proposer ``name`` can run against this model config.
+
+    Weight-free proposers are always available; proposers with
+    ``requires_backend_draft`` additionally need the backend's
+    ``draft_config`` hook to return a config (the taylor backend does for
+    order-2 targets; KV backends return None).
+
+    Args:
+      cfg: target model config.
+      name: registered proposer name.
+
+    Returns:
+      True when the proposer can serve ``cfg``.
+    """
+    cls = _PROPOSERS.get(name)
+    if cls is None:
+        return False
+    if cls.requires_backend_draft:
+        return resolve_backend(cfg).draft_config(cfg) is not None
+    return True
+
+
+# -- proposers ---------------------------------------------------------------
+
+
+def _ngram_continuation(ctx: List[int], k: int) -> List[int]:
+    """Prompt-lookup draft: continuation of the most recent previous
+    occurrence of the current suffix n-gram (longest of 3/2/1-grams),
+    padded with its last token; falls back to repeating the slot's last
+    token (which alone captures the period-1 attractors greedy decode
+    falls into)."""
+    n = len(ctx)
+    for g in (3, 2, 1):
+        if n <= g:
+            continue
+        key = ctx[n - g:]
+        for s in range(n - g - 1, -1, -1):
+            if ctx[s:s + g] == key:
+                cont = list(ctx[s + g:s + g + k])
+                while len(cont) < k:
+                    cont.append(cont[-1])
+                return cont
+    return [ctx[-1]] * k
+
+
+@register_proposer
+class NgramProposer(DraftProposer):
+    """Weight-free prompt/history n-gram proposer (the baseline).
+
+    Drafts by copying the continuation of the most recent previous
+    occurrence of the slot's current suffix n-gram from its full host-side
+    context (prompt + emitted tokens).  Runs entirely on the host: ZERO
+    extra device dispatches, so every accepted token is pure
+    dispatch-per-token profit.  Strong exactly when generation is
+    input-grounded or repetitive (prompt lookup decoding); arbitrarily
+    weak elsewhere — the verify keeps output token-identical regardless.
+    """
+
+    name = "ngram"
+    requires_backend_draft = False
+
+    def propose(self, slot_ids: List[int], k: int) -> np.ndarray:
+        """Draft k tokens per slot by suffix n-gram lookup.
+
+        Args:
+          slot_ids: slot indices to draft for.
+          k: tokens to propose per slot.
+
+        Returns:
+          ``[len(slot_ids), k]`` int32 proposals.
+        """
+        out = np.zeros((len(slot_ids), k), np.int32)
+        for r, i in enumerate(slot_ids):
+            out[r] = _ngram_continuation(self.spec.ctx(i), k)
+        return out
+
+
+@register_proposer
+class Order1SelfDraft(DraftProposer):
+    """Same-weights order-1 self-draft (the paper's order hierarchy).
+
+    The backend's ``draft_config`` hook drops the order-2 moment terms
+    (``z2``/``S2``) — the Taylor feature map is parameter-free, so the
+    draft reuses the target's weights verbatim over a lightweight order-1
+    moment state per slot (its own slotted cache).  Each round is ONE
+    fused dispatch (``_jitted_draft_propose``): catch-up chunk-absorb of
+    the tokens accepted since the last round, then k-1 order-1 decode
+    steps.  Only the catch-up state is kept, so the draft needs no
+    rollback; acceptance tracks how well ``exp(s) ~ 1 + s`` approximates
+    the order-2 map — high when attention logits are small, exactly the
+    regime the paper's expansion targets.
+    """
+
+    name = "order1"
+    requires_backend_draft = True
+
+    def __init__(self, spec: "Speculator"):
+        """Allocates the order-1 slotted draft cache for ``spec``'s engine.
+
+        Args:
+          spec: the owning ``Speculator``.
+        """
+        super().__init__(spec)
+        eng = spec.eng
+        dcfg = resolve_backend(eng.cfg).draft_config(eng.cfg)
+        if dcfg is None:
+            raise ValueError(
+                f"backend {eng.cfg.attention!r} has no self-draft config"
+            )
+        self.cfg = dcfg
+        with eng._device_ctx():
+            self._caches = slots_mod.init_slot_caches(
+                dcfg, eng.max_slots, eng.n_max, eng._cache_dtype,
+                mesh=eng.mesh, rules=eng.rules,
+            )
+        # Positions the draft state has absorbed, per slot; -1 = unprimed.
+        self._pos = np.full((eng.max_slots,), -1, np.int64)
+
+    def _prime(self, slot: int) -> None:
+        """(Re)build the draft state from the slot's full context — one
+        batch-1 order-1 prefill dispatch (admission / resume / recovery)."""
+        eng = self.spec.eng
+        p = int(eng._pos[slot])
+        toks = np.asarray(self.spec.ctx(slot)[:p], np.int32)[None]
+        with eng._device_ctx():
+            _lg, c = engine_mod._jitted_prefill(self.cfg, eng.n_max)(
+                eng.params, {"tokens": jnp.asarray(toks)}
+            )
+            self._caches = slots_mod.write_slot(
+                self._caches, c, jnp.asarray(slot, jnp.int32)
+            )
+        eng._stats["dispatches"] += 1
+        eng._stats["draft_dispatches"] += 1
+        eng._stats["draft_tokens"] += p
+        self._pos[slot] = p
+
+    def on_install(self, slot: int) -> None:
+        """Prime the slot's order-1 state from its context."""
+        self._prime(slot)
+
+    def on_release(self, slot: int) -> None:
+        """Mark the slot's draft state stale (re-primed on reuse; the dead
+        device rows are fully overwritten by the next ``write_slot``)."""
+        self._pos[slot] = -1
+
+    def on_rebuild(self) -> None:
+        """Invalidate every slot's draft state after a cache rebuild."""
+        self._pos[:] = -1
+
+    def propose(self, slot_ids: List[int], k: int) -> np.ndarray:
+        """Draft k tokens per slot with the order-1 state.
+
+        Slots are grouped by catch-up width (how many accepted tokens the
+        draft state is behind — at most k+1 by construction), one fused
+        dispatch per width; after a full-accept round every slot needs the
+        same k+1 catch-up, so the common case is a single dispatch.
+
+        Args:
+          slot_ids: slot indices to draft for.
+          k: tokens to propose per slot.
+
+        Returns:
+          ``[len(slot_ids), k]`` int32 proposals.
+        """
+        eng = self.spec.eng
+        out = np.zeros((eng.max_slots, k), np.int32)
+        by_w: Dict[int, List[int]] = {}
+        for i in slot_ids:
+            w = int(eng._pos[i]) - int(self._pos[i]) + 1
+            if self._pos[i] < 0 or w < 1 or w > k + 1:
+                self._prime(i)
+                w = 1
+            by_w.setdefault(w, []).append(i)
+        for w, group in sorted(by_w.items()):
+            window = np.zeros((eng.max_slots, w), np.int32)
+            pos0 = np.zeros((eng.max_slots,), np.int32)
+            mask = np.zeros((eng.max_slots,), bool)
+            for i in group:
+                d0 = int(self._pos[i])
+                window[i] = self.spec.ctx(i)[d0:d0 + w]
+                pos0[i] = d0
+                mask[i] = True
+            fn = _jitted_draft_propose(self.cfg, w, k)
+            with eng._device_ctx():
+                self._caches, drafts = fn(
+                    eng.params, self._caches, jnp.asarray(window),
+                    jnp.asarray(pos0), jnp.asarray(mask),
+                )
+            eng._stats["dispatches"] += 1
+            eng._stats["draft_dispatches"] += 1
+            eng._stats["draft_tokens"] += len(group) * (w + k - 1)
+            drafts = np.asarray(drafts)
+            for i in group:
+                out[i] = drafts[i]
+                self._pos[i] = int(eng._pos[i]) + 1
+        return out[np.asarray(slot_ids, np.intp)]
+
+
+# -- per-engine speculative driver ------------------------------------------
+
+
+class Speculator:
+    """Per-engine speculative-decoding driver.
+
+    Owned by ``ServeEngine``; the scheduler calls the lifecycle hooks on
+    slot install/resume/release/rebuild and ``run_rounds`` once per engine
+    step, BEFORE the decode block — slots a verify advanced this step are
+    excluded from the block's active mask (the decode scan preserves
+    inactive slots' state bit-identically), so speculative and plain slots
+    co-batch freely.  All host bookkeeping is per slot: the effective k /
+    draft choice, and the full token context ``ctx`` (prompt + emitted,
+    including the pending token) that both proposers read.
+    """
+
+    def __init__(self, eng):
+        """Binds the driver to its engine (no device allocation until a
+        speculating request actually arrives).
+
+        Args:
+          eng: the owning ``ServeEngine``.
+        """
+        self.eng = eng
+        self._proposers: Dict[str, DraftProposer] = {}
+        self._ctx: List[Optional[List[int]]] = [None] * eng.max_slots
+        self._slot_k = np.zeros((eng.max_slots,), np.int64)
+        self._slot_draft = [""] * eng.max_slots
+
+    # -- host bookkeeping ---------------------------------------------------
+
+    def ctx(self, slot: int) -> List[int]:
+        """The slot's full host-side token context.
+
+        Prompt + every emitted token, INCLUDING the pending (not yet
+        absorbed) token at position ``engine._pos[slot]`` — the invariant
+        ``len(ctx) == pos + 1`` holds between rounds.
+
+        Args:
+          slot: slot index.
+
+        Returns:
+          Mutable token list (the driver's own record).
+        """
+        return self._ctx[slot]
+
+    def spec_params(self, tr) -> Tuple[int, str]:
+        """Effective (k, draft) for one tracked request.
+
+        Request-level knobs override the ``SchedulerPolicy`` defaults;
+        sampled requests (temperature > 0) fall back to plain decode —
+        greedy acceptance is what makes speculative output token-identical.
+
+        Args:
+          tr: the scheduler's ``_Tracked`` record.
+
+        Returns:
+          ``(k, draft_name)``; ``k <= 0`` means not speculating.
+        """
+        req = tr.req
+        k = (req.speculative_k if req.speculative_k is not None
+             else self.eng.sched.speculative_k)
+        if k is None or k <= 0 or req.temperature > 0:
+            return 0, ""
+        draft = (req.draft if req.draft is not None
+                 else self.eng.sched.speculative_draft)
+        return int(k), draft
+
+    def _proposer(self, name: str) -> DraftProposer:
+        p = self._proposers.get(name)
+        if p is None:
+            p = _PROPOSERS[name](self)
+            self._proposers[name] = p
+        return p
+
+    # -- slot lifecycle hooks (called by the scheduler) ---------------------
+
+    def on_install(self, slot: int, tr, out: List[int]) -> None:
+        """A request was installed into ``slot`` after (re-)prefill.
+
+        Args:
+          slot: slot index.
+          tr: its ``_Tracked`` record.
+          out: the slot's output so far (accepted prefix + first token).
+        """
+        k, draft = self.spec_params(tr)
+        self._slot_k[slot] = k
+        self._slot_draft[slot] = draft
+        if k <= 0:
+            self._ctx[slot] = None
+            return
+        prompt = [int(t) for t in np.asarray(tr.req.tokens).reshape(-1)]
+        self._ctx[slot] = prompt + [int(t) for t in out]
+        self._proposer(draft).on_install(slot)
+
+    def on_resume(self, slot: int, tr) -> None:
+        """A preempted request resumed into ``slot`` from its snapshot
+        (accepted tokens already include the pending one).
+
+        Args:
+          slot: slot index.
+          tr: its ``_Tracked`` record.
+        """
+        k, draft = self.spec_params(tr)
+        self._slot_k[slot] = k
+        self._slot_draft[slot] = draft
+        if k <= 0:
+            self._ctx[slot] = None
+            return
+        self._ctx[slot] = [int(t) for t in tr.effective_tokens()]
+        self._proposer(draft).on_install(slot)
+
+    def on_release(self, slot: int) -> None:
+        """``slot`` was released — drop its speculative bookkeeping.
+
+        Args:
+          slot: slot index.
+        """
+        if self._slot_k[slot] > 0:
+            self._proposer(self._slot_draft[slot]).on_release(slot)
+        self._slot_k[slot] = 0
+        self._slot_draft[slot] = ""
+        self._ctx[slot] = None
+
+    def on_rebuild(self) -> None:
+        """The engine rebuilt its caches after a dispatch loss — every
+        slot's speculative state is gone with it."""
+        for p in self._proposers.values():
+            p.on_rebuild()
+        self._slot_k[:] = 0
+        self._slot_draft = [""] * self.eng.max_slots
+        self._ctx = [None] * self.eng.max_slots
+
+    def on_decode_tokens(self, slot: int, tokens: List[int]) -> None:
+        """Tokens the PLAIN decode block emitted for a speculating slot
+        (the final < k tokens of its budget decode plainly) — keeps the
+        host context in sync.
+
+        Args:
+          slot: slot index.
+          tokens: tokens appended to the slot's output this block.
+        """
+        ctx = self._ctx[slot]
+        if ctx is not None:
+            ctx.extend(int(t) for t in tokens)
+
+    # -- the verify round ---------------------------------------------------
+
+    def _verify_fn(self, width: int):
+        """Per-engine compiled verify (mesh builds pin this engine's cache
+        shardings + replicate the greedy tokens, same donation argument as
+        the decode scan)."""
+        eng = self.eng
+        if eng.mesh is None:
+            return _jitted_verify(eng.cfg, width)
+        key = ("spec_verify", width)
+        fn = eng._scan_cache.get(key)
+        if fn is None:
+            rep = jax.sharding.NamedSharding(
+                eng.mesh, jax.sharding.PartitionSpec()
+            )
+            fn = jax.jit(
+                functools.partial(_verify_impl, cfg=eng.cfg),
+                donate_argnums=(1,),
+                out_shardings=(eng._cache_ns, rep),
+            )
+            eng._scan_cache[key] = fn
+        return fn
+
+    def run_rounds(self) -> Set[int]:
+        """Run one draft/verify round for every due speculating slot.
+
+        Due = active, greedy, ``remaining > k`` (the final <= k tokens go
+        through the plain decode block: a shorter verify window would just
+        absorb positions past the budget).  Slots sharing k share ONE
+        verify dispatch; proposals come from each slot's own proposer.
+        Returns the advanced slots — the scheduler masks them out of this
+        step's decode block.
+
+        Returns:
+          Set of slot indices a verify advanced this step.
+        """
+        eng = self.eng
+        by_k: Dict[int, List[int]] = {}
+        for i, st in enumerate(eng._slots):
+            if (st.rid is None or st.done or st.prefilling
+                    or st.remaining <= 0):
+                continue
+            k = int(self._slot_k[i])
+            if k <= 0 or st.remaining <= k:
+                continue
+            by_k.setdefault(k, []).append(i)
+        handled: Set[int] = set()
+        for k in sorted(by_k):
+            if not self._round(k, by_k[k], handled):
+                break  # dispatch loss: the engine rebuilt, round aborted
+        return handled
+
+    def _round(self, k: int, slot_ids: List[int], handled: Set[int]) -> bool:
+        """One verify round for the slots speculating at depth ``k``.
+        Returns False when a dispatch loss rebuilt the engine."""
+        eng = self.eng
+        width = k + 1
+        props = np.zeros((eng.max_slots, k), np.int32)
+        by_draft: Dict[str, List[int]] = {}
+        for i in slot_ids:
+            by_draft.setdefault(self._slot_draft[i], []).append(i)
+        for name in sorted(by_draft):
+            group = by_draft[name]
+            arr = self._proposer(name).propose(group, k)
+            for r, i in enumerate(group):
+                props[i] = arr[r]
+        # Pre-verify snapshots (the rollback source): read BEFORE the
+        # verify donates the cache.  O(1) bytes per slot on taylor.
+        snaps = {}
+        with eng._device_ctx():
+            for i in slot_ids:
+                snaps[i] = eng._read_slot(
+                    eng.caches, jnp.asarray(i, jnp.int32)
+                )
+        window = np.repeat(
+            eng._token[:, None], width, axis=1
+        ).astype(np.int32)
+        for i in slot_ids:
+            window[i, 1:] = props[i]
+        mask = np.zeros((eng.max_slots,), bool)
+        mask[slot_ids] = True
+        try:
+            eng.caches, greedy = eng._dispatch(self._verify_fn(width), (
+                eng.params, eng.caches, jnp.asarray(window),
+                jnp.asarray(eng._pos), jnp.asarray(mask),
+            ))
+        except Exception as e:  # noqa: BLE001 — resilience boundary
+            eng._rebuild_after_loss(f"verify dispatch failed: {e}")
+            return False
+        eng._stats["dispatches"] += 1
+        eng._stats["verify_dispatches"] += 1
+        eng._stats["verify_tokens"] += len(slot_ids) * width
+        eng._stats["spec_rounds"] += 1
+        greedy = np.asarray(greedy)
+        for i in slot_ids:
+            st = eng._slots[i]
+            p = int(eng._pos[i])
+            g = greedy[i]
+            m = 0
+            while m < k and int(props[i, m]) == int(g[m]):
+                m += 1
+            emitted = [int(g[j]) for j in range(m + 1)]
+            eos = int(eng._eos[i])
+            if eos >= 0 and eos in emitted:
+                emitted = emitted[:emitted.index(eos) + 1]
+                st.done = True
+            st.out.extend(emitted)
+            st.remaining -= len(emitted)
+            ctx = self._ctx[i]
+            if ctx is not None:
+                ctx.extend(emitted)
+            eng._stats["spec_tokens"] += len(emitted)
+            eng._stats["spec_drafted"] += k
+            eng._stats["spec_accepted"] += m
+            if st.done or m == k:
+                # Full accept (or retiring on eos): the verify's state IS
+                # the state plain decode would have built — zero extra work.
+                eng._token[i] = int(g[m])
+                eng._pos[i] = p + m + 1
+                if m == k:
+                    eng._stats["spec_full_accepts"] += 1
+            else:
+                # Rollback: re-absorb the accepted window prefix from the
+                # snapshot (one chunk dispatch) and splice it back.
+                eng._stats["spec_rollbacks"] += 1
+                prefix = jnp.asarray(window[i:i + 1, :m + 1])
+                try:
+                    with eng._device_ctx():
+                        _lg, c1 = eng._dispatch(
+                            eng._prefill_chunk_fn(),
+                            (eng.params, prefix, snaps.pop(i),
+                             jnp.asarray(p, jnp.int32)),
+                        )
+                        eng.caches = eng._write_slot(
+                            eng.caches, c1, jnp.asarray(i, jnp.int32)
+                        )
+                except Exception as e:  # noqa: BLE001
+                    eng._rebuild_after_loss(f"rollback dispatch failed: {e}")
+                    return False
+                eng._stats["dispatches"] += 1
+                eng._stats["verify_tokens"] += m + 1
+                eng._token[i] = int(g[m])
+                eng._pos[i] = p + m + 1
+            handled.add(i)
+        return True

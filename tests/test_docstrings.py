@@ -21,6 +21,7 @@ MODULES = (
     "repro.serve.load",
     "repro.serve.scheduler",
     "repro.serve.slots",
+    "repro.serve.speculative",
     "repro.backends",
     "repro.backends.base",
     "repro.backends.registry",
@@ -50,6 +51,7 @@ DOCUMENTED_SIGNATURES = {
     ),
     "repro.serve.faults": ("standard_trace",),
     "repro.serve.load": ("poisson_trace", "bursty_trace", "run_trace"),
+    "repro.serve.speculative": ("register_proposer", "draft_available"),
     "repro.backends.registry": (
         "register_backend", "get_backend", "resolve_backend",
     ),
@@ -115,13 +117,27 @@ def test_engine_classes_documented():
         Status,
     )
 
+    from repro.serve.speculative import (
+        DraftProposer,
+        NgramProposer,
+        Order1SelfDraft,
+        Speculator,
+    )
+
     for cls in (Request, ServeEngine, RequestResult, ResiliencePolicy,
                 Status, FaultPlan, SchedulerPolicy, Trace, TraceItem,
-                VirtualClock, CostModel, SLO, LoadReport):
+                VirtualClock, CostModel, SLO, LoadReport, DraftProposer,
+                NgramProposer, Order1SelfDraft, Speculator):
         assert (inspect.getdoc(cls) or "").strip(), cls
     for meth in ("submit", "step", "run", "poll", "stats"):
         doc = inspect.getdoc(getattr(ServeEngine, meth)) or ""
         assert doc.strip(), f"ServeEngine.{meth} undocumented"
+    # the proposer protocol is the extension contract — every lifecycle
+    # hook must be documented
+    for meth in ("propose", "on_install", "on_release", "on_rebuild"):
+        doc = inspect.getdoc(getattr(DraftProposer, meth)) or ""
+        assert doc.strip(), f"DraftProposer.{meth} undocumented"
+    assert (inspect.getdoc(Speculator.run_rounds) or "").strip()
 
 
 def test_backend_protocol_methods_documented():

@@ -1,0 +1,448 @@
+"""Speculative decoding: token-identity property suite + policy surface.
+
+The contract under test (docs/serving.md §Speculative decoding):
+
+* greedy speculative output is TOKEN-IDENTICAL to plain decode — for
+  every proposer, under co-batching with non-speculating slots,
+  mid-flight admission, preemption mid-draft-window, quarantine of a
+  speculating slot, and on a 2x2 mesh;
+* submit-time validation rejects unusable speculative knobs with typed
+  ``RequestRejected`` reasons (``bad_speculative_k``, ``unknown_draft``,
+  ``draft_unavailable``) and engine construction rejects bad policies;
+* the stats surface is coherent: every emitted token is counted exactly
+  once across ``decode_tokens``/``spec_tokens``/first tokens, and the
+  PLAIN path's ``dispatches_per_token`` is byte-pinned against the
+  checked-in BENCH_load.json row (the uniform-accounting regression);
+* speculation actually pays: fewer dispatches than plain decode on a
+  per-token dispatch budget (``decode_block=1``).
+"""
+
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.serve import (
+    CostModel,
+    FaultPlan,
+    Request,
+    RequestRejected,
+    ResiliencePolicy,
+    SchedulerPolicy,
+    ServeEngine,
+    SlotCorruption,
+    Status,
+    draft_available,
+    has_proposer,
+    poisson_trace,
+    proposer_names,
+    run_trace,
+)
+from repro.serve.speculative import _ngram_continuation
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+DRAFTS = ("ngram", "order1")
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Small model shared by every test (compilation dominates runtime)."""
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("n_max", 64)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _requests(cfg, seed, n=6, prompt=(3, 12), new=(8, 24)):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            tokens=rng.integers(1, cfg.vocab,
+                                size=int(rng.integers(*prompt))).tolist(),
+            max_new_tokens=int(rng.integers(*new)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _solo(cfg, params, req):
+    """Reference: the request decoded alone on a fresh plain engine."""
+    eng = _engine(cfg, params)
+    rid = eng.submit(Request(tokens=list(req.tokens),
+                             max_new_tokens=req.max_new_tokens))
+    return eng.run()[rid]
+
+
+def _run_all(eng, reqs):
+    rids = [eng.submit(r) for r in reqs]
+    res = eng.run(return_results=True)
+    return [res[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# Proposer units + registry
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_continuation_lookup():
+    """Suffix n-gram lookup: copies the continuation of the most recent
+    previous occurrence (longest gram wins), pads short continuations,
+    and falls back to repeating the last token."""
+    # 3-gram [4,5,6] recurs; its continuation is [7,8,...]
+    assert _ngram_continuation([1, 4, 5, 6, 7, 8, 9, 4, 5, 6], 3) == [7, 8, 9]
+    # continuation shorter than k → padded with its last element
+    assert _ngram_continuation([5, 1, 2, 1, 2], 3) == [1, 2, 2]
+    # period-1 attractor: no recurring gram, repeat the last token
+    assert _ngram_continuation([1, 2, 3], 4) == [3, 3, 3, 3]
+    # 1-gram fallback when no 3/2-gram recurs
+    assert _ngram_continuation([9, 1, 2, 9], 2) == [1, 2]
+
+
+def test_registry_surface(served):
+    """Both shipped proposers are registered; availability reflects the
+    backend's draft hierarchy (order-1 targets have no cheaper draft)."""
+    cfg, _ = served
+    assert proposer_names() == ("ngram", "order1")
+    assert has_proposer("ngram") and not has_proposer("nope")
+    assert draft_available(cfg, "ngram")
+    assert draft_available(cfg, "order1")  # reduced smollm is order 2
+    o1 = cfg.replace(taylor=dataclasses.replace(cfg.taylor, order=1))
+    assert draft_available(o1, "ngram")
+    assert not draft_available(o1, "order1")
+    assert not draft_available(cfg, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Submit-time validation + policy validation
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_bad_speculative_knobs(served):
+    """Unusable speculative knobs are rejected at submit with typed
+    reasons AND recorded as terminal REJECTED results."""
+    cfg, params = served
+    eng = _engine(cfg, params)
+    p = [1, 2, 3]
+    cases = [
+        (Request(tokens=p, max_new_tokens=8, speculative_k=0),
+         "bad_speculative_k"),
+        (Request(tokens=p, max_new_tokens=8, speculative_k=-3),
+         "bad_speculative_k"),
+        (Request(tokens=p, max_new_tokens=4, speculative_k=5),
+         "bad_speculative_k"),
+        (Request(tokens=p, max_new_tokens=8, draft="nope"),
+         "unknown_draft"),
+    ]
+    for req, reason in cases:
+        with pytest.raises(RequestRejected) as exc:
+            eng.submit(req)
+        assert exc.value.reason == reason
+        assert eng.poll()[exc.value.rid].status is Status.REJECTED
+
+
+def test_submit_rejects_unavailable_draft(served):
+    """A registered proposer whose backend hook returns None (order-1
+    target has no cheaper self-draft) is ``draft_unavailable``."""
+    cfg, params = served
+    o1 = cfg.replace(taylor=dataclasses.replace(cfg.taylor, order=1))
+    p1 = lm_init(jax.random.PRNGKey(0), o1)
+    eng = _engine(o1, p1)
+    with pytest.raises(RequestRejected) as exc:
+        eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=8,
+                           speculative_k=2, draft="order1"))
+    assert exc.value.reason == "draft_unavailable"
+
+
+def test_bad_policy_rejected_at_construction(served):
+    """Engine-wide speculative knobs are validated when the engine is
+    built, not when the first request dies."""
+    cfg, params = served
+    with pytest.raises(ValueError, match="speculative_k"):
+        _engine(cfg, params, sched=SchedulerPolicy(speculative_k=-1))
+    with pytest.raises(ValueError, match="draft"):
+        _engine(cfg, params, sched=SchedulerPolicy(
+            speculative_k=4, speculative_draft="nope"))
+    o1 = cfg.replace(taylor=dataclasses.replace(cfg.taylor, order=1))
+    p1 = lm_init(jax.random.PRNGKey(0), o1)
+    with pytest.raises(ValueError, match="order1"):
+        _engine(o1, p1, sched=SchedulerPolicy(
+            speculative_k=4, speculative_draft="order1"))
+
+
+# ---------------------------------------------------------------------------
+# Token-identity property suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_speculative_token_identical_to_plain(served, draft, seed):
+    """THE speculative contract: greedy output under draft/verify is
+    token-identical to plain decode for every request — and speculation
+    actually ran (rounds, accepted drafts)."""
+    cfg, params = served
+    reqs = _requests(cfg, seed)
+    eng = _engine(cfg, params, sched=SchedulerPolicy(
+        speculative_k=4, speculative_draft=draft))
+    results = _run_all(eng, reqs)
+    for req, r in zip(reqs, results):
+        assert r.status is Status.OK
+        np.testing.assert_array_equal(r.tokens, _solo(cfg, params, req))
+    st = eng.stats()
+    assert st["spec_rounds"] > 0
+    assert st["spec_accepted"] > 0
+    assert st["spec_tokens"] > 0
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+def test_mixed_spec_and_plain_slots_cobatch(served, draft):
+    """Per-request overrides co-batch speculating and plain slots in the
+    same engine (the decode scan must keep verify-advanced slots frozen):
+    every output token-identical to solo, both kinds actually ran."""
+    cfg, params = served
+    reqs = _requests(cfg, 2, n=6)
+    # policy default OFF; odd requests opt in per-request
+    for j, r in enumerate(reqs):
+        if j % 2 == 1:
+            reqs[j] = dataclasses.replace(r, speculative_k=3, draft=draft)
+    eng = _engine(cfg, params)
+    results = _run_all(eng, reqs)
+    for req, r in zip(reqs, results):
+        assert r.status is Status.OK
+        np.testing.assert_array_equal(r.tokens, _solo(cfg, params, req))
+    st = eng.stats()
+    assert st["spec_rounds"] > 0, "no speculative rounds ran"
+    assert st["decode_dispatches"] > 0, "plain decode never co-ran"
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+def test_mid_flight_admission_token_identity(served, draft):
+    """Requests admitted while other slots are mid-speculation (and vice
+    versa) still match solo decode — admission re-primes draft state."""
+    cfg, params = served
+    reqs = _requests(cfg, 3, n=4, new=(12, 20))
+    eng = _engine(cfg, params, sched=SchedulerPolicy(
+        speculative_k=4, speculative_draft=draft))
+    rids = [eng.submit(reqs[0]), eng.submit(reqs[1])]
+    for _ in range(3):
+        eng.step()  # both slots mid-flight, verify rounds under way
+    rids += [eng.submit(reqs[2]), eng.submit(reqs[3])]
+    while eng.step():
+        pass
+    res = eng.poll()
+    for req, rid in zip(reqs, rids):
+        assert res[rid].status is Status.OK
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      _solo(cfg, params, req))
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+def test_preemption_during_draft_window_token_identity(served, draft):
+    """A speculating slot evicted between verify rounds resumes from its
+    snapshot (draft state re-primed, NO re-prefill) token-identically —
+    the PR 7 handoff composes with the speculative round."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    lo_req = Request(tokens=rng.integers(1, cfg.vocab, size=6).tolist(),
+                     max_new_tokens=16, priority=5)
+    hi_req = Request(tokens=rng.integers(1, cfg.vocab, size=8).tolist(),
+                     max_new_tokens=6, priority=0)
+    eng = _engine(cfg, params, max_slots=1, sched=SchedulerPolicy(
+        preemption=True, speculative_k=4, speculative_draft=draft))
+    lo = eng.submit(lo_req)
+    for _ in range(2):
+        eng.step()
+    prefix = list(eng._slots[0].out)
+    assert len(prefix) > 1, "low-priority slot never speculated"
+    hi = eng.submit(hi_req)
+    res = eng.run(return_results=True)
+    st = eng.stats()
+    assert st["preemptions"] >= 1 and st["resumes"] >= 1
+    assert st["spec_rounds"] > 0
+    assert res[lo].status is Status.OK and res[hi].status is Status.OK
+    assert list(res[lo].tokens[:len(prefix)]) == prefix, \
+        "accepted prefix lost across preemption"
+    np.testing.assert_array_equal(res[lo].tokens, _solo(cfg, params, lo_req))
+    np.testing.assert_array_equal(res[hi].tokens, _solo(cfg, params, hi_req))
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+def test_quarantine_of_speculating_slot_recovers(served, draft):
+    """NaN corruption injected into a slot holding draft state: the slot
+    is quarantined, re-prefilled, its draft state re-primed — and the
+    final output is still token-identical (co-batched slot untouched)."""
+    cfg, params = served
+    reqs = _requests(cfg, 4, n=2, new=(10, 16))
+    plan = FaultPlan(events=(SlotCorruption(at_block=1, slot=0,
+                                            mode="nan"),))
+    eng = _engine(cfg, params, fault_plan=plan, sched=SchedulerPolicy(
+        speculative_k=4, speculative_draft=draft))
+    results = _run_all(eng, reqs)
+    for req, r in zip(reqs, results):
+        assert r.status is Status.OK
+        np.testing.assert_array_equal(r.tokens, _solo(cfg, params, req))
+    st = eng.stats()
+    assert st["quarantined"] == 1
+    assert st["retries"] >= 1
+    assert st["spec_rounds"] > 0
+
+
+def test_speculative_token_identity_2x2_mesh_subprocess(served):
+    """Token identity holds sharded: both proposers on a 2x2 mesh emit
+    exactly the single-device plain tokens (the verify dispatch pins the
+    engine's cache shardings; the order-1 draft cache shards too)."""
+    del served  # subprocess rebuilds its own model
+    code = """
+    import jax, json
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import Request, SchedulerPolicy, ServeEngine
+
+    cfg = get_reduced("smollm-135m")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(1, cfg.vocab, size=int(n)).tolist(), int(m))
+            for n, m in zip(rng.integers(3, 12, size=4),
+                            rng.integers(8, 20, size=4))]
+
+    def run(sched, mesh):
+        eng = ServeEngine(params, cfg, max_slots=2, n_max=64,
+                          decode_block=4, sched=sched, mesh=mesh)
+        rids = [eng.submit(Request(tokens=p, max_new_tokens=m))
+                for p, m in reqs]
+        res = eng.run()
+        return [res[r].tolist() for r in rids], eng.stats()
+
+    plain, _ = run(SchedulerPolicy(), None)
+    verdict = {}
+    for draft in ("ngram", "order1"):
+        sched = SchedulerPolicy(speculative_k=4, speculative_draft=draft)
+        toks, st = run(sched, make_serve_mesh(2, 2))
+        verdict[draft] = {"identical": toks == plain,
+                          "spec_rounds": st["spec_rounds"],
+                          "spec_accepted": st["spec_accepted"]}
+    print(json.dumps(verdict))
+    """
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(_REPO / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(_REPO),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    verdict = json.loads(out.stdout.strip().splitlines()[-1])
+    for draft in DRAFTS:
+        assert verdict[draft]["identical"], f"{draft} diverged on the mesh"
+        assert verdict[draft]["spec_rounds"] > 0
+        assert verdict[draft]["spec_accepted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Stats coherence + dispatch accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("draft", DRAFTS)
+def test_stats_counters_coherent(served, draft):
+    """Every emitted token is counted exactly once: first tokens (one per
+    request) + plain ``decode_tokens`` + verify-emitted ``spec_tokens``
+    equals the total output; acceptance and dispatch counters bound each
+    other."""
+    cfg, params = served
+    reqs = _requests(cfg, 6, n=4)
+    eng = _engine(cfg, params, sched=SchedulerPolicy(
+        speculative_k=4, speculative_draft=draft))
+    results = _run_all(eng, reqs)
+    st = eng.stats()
+    total = sum(int(np.asarray(r.tokens).size) for r in results)
+    assert (st["decode_tokens"] + st["spec_tokens"] + len(reqs)) == total
+    assert st["verify_dispatches"] == st["spec_rounds"]
+    assert 0 < st["spec_accepted"] <= st["spec_drafted"]
+    # a full accept is one slot accepting all k=4 drafts in one round
+    assert st["spec_full_accepts"] * 4 <= st["spec_accepted"]
+    # every speculative dispatch is also a plain dispatch (absent = 0)
+    assert st["dispatches"] >= (st["decode_dispatches"]
+                                + st["prefill_dispatches"]
+                                + st["verify_dispatches"]
+                                + st.get("draft_dispatches", 0))
+    if draft == "ngram":
+        assert st.get("draft_dispatches", 0) == 0  # host-side proposer
+    else:
+        assert st["draft_dispatches"] > 0
+        assert st["draft_tokens"] > 0
+
+
+def test_plain_path_dispatches_per_token_pinned_to_bench(served):
+    """Uniform-accounting regression: the PLAIN path's
+    ``dispatches_per_token`` (now computed over decode + spec + first
+    tokens) is byte-identical to the checked-in BENCH_load.json row —
+    adding the speculative term must not move plain numbers."""
+    cfg, params = served
+    bench = json.loads((_REPO / "benchmarks" / "BENCH_load.json").read_text())
+    derived = dict(kv.split("=") for kv in
+                   bench["load_poisson_fifo"]["derived"].split(";"))
+    pinned = float(derived["dispatches_per_token"])
+    # exact replay of benchmarks/bench_load.py's poisson/fifo row
+    trace = poisson_trace(0, 16, vocab=cfg.vocab, prompt_len=(4, 20),
+                          new_tokens=(3, 10), priorities=(0, 5),
+                          mean_interarrival_s=0.0004)
+    policy = ResiliencePolicy(max_queue=5, degrade_queue_depth=4,
+                              degraded_max_new_tokens=8)
+
+    def make(clock):
+        return _engine(cfg, params, prefill_chunk=8, clock=clock,
+                       policy=policy, sched=SchedulerPolicy())
+
+    report = run_trace(make, trace, "fifo")
+    assert report.metrics["dispatches_per_token"] == pytest.approx(pinned)
+
+
+def test_speculation_cuts_dispatches_per_token(served):
+    """The headline: on a per-token dispatch budget (``decode_block=1``),
+    the speculative engine completes the same greedy workload in strictly
+    fewer dispatches than plain decode, and below one dispatch per
+    token — while the cost model prices the verify work it adds."""
+    cfg, params = served
+    reqs = _requests(cfg, 7, n=4, new=(24, 33))
+
+    def run(sched):
+        eng = _engine(cfg, params, decode_block=1, sched=sched)
+        results = _run_all(eng, reqs)
+        st = eng.stats()
+        toks = sum(int(np.asarray(r.tokens).size) for r in results)
+        return results, st, st["dispatches"] / toks
+
+    plain_res, plain_st, plain_dpt = run(SchedulerPolicy())
+    spec_res, spec_st, spec_dpt = run(SchedulerPolicy(
+        speculative_k=4, speculative_draft="ngram"))
+    for a, b in zip(plain_res, spec_res):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert spec_dpt < plain_dpt
+    assert spec_dpt < 1.0
+    # the cost model prices speculative token work (spec_token_us > 0)
+    cost = CostModel()
+    priced = cost.step_cost_us(
+        {k: 0 for k in spec_st},
+        {"verify_tokens": 10, "draft_tokens": 4},
+    )
+    assert priced >= cost.spec_token_us * 14
