@@ -1,0 +1,227 @@
+"""Memory bench: state representations — slots-per-GB, bytes/slot, error.
+
+Three row families, all machine-asserted (plain ``assert`` — run.py
+records a failure row and exits non-zero, same contract as the
+fat-chunk check in bench_load):
+
+  * ``memory_state_{dense,int8,fp8}`` — Taylor moment state bytes/slot
+    and slots-per-GB at serving shape, plus the ``read_slot`` snapshot
+    cost (the preemption-path latency of each representation).
+    ASSERTS int8 shrinks bytes/slot ≥ 2.5x vs dense (measured ~3.9x —
+    n0 and the per-head pow2 scales stay fp32, everything else drops to
+    1 byte).
+  * ``memory_kv_{dense,paged}`` — MEAN live KV bytes over the steps of
+    the bursty arrival trace (short prompts against the ``n_max``
+    capacity ceiling — the regime paging exists for).  ASSERTS the
+    paged mean is ≥ 2x under dense.  Deterministic: virtual clock,
+    seeded trace.
+  * ``memory_error_horizon_{int8,fp8}`` — the quantisation error table:
+    teacher-forced logit MAE vs fp32 after a per-token quantise
+    round-trip (the serve engine re-encodes once per block; per-token
+    is the harsher bound), and the margin below which greedy flips were
+    observed.  ASSERTS the tests' pinned bounds
+    (tests/test_state_quant.py) hold here too, and that int8 < fp8 on
+    MAE — per-head pow2-scaled int8 is the TIGHTER format at these
+    activation scales.
+
+Rows land in ``BENCH_memory.json`` via benchmarks/run.py; the README
+§Memory table is rendered from it by render_tables.py (CI checks
+drift).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+
+# must match the pinned constants in tests/test_state_quant.py
+MAE_TOL = {"int8": 0.25, "fp8": 1.25}
+
+SLOTS = 4
+N_MAX = 64
+PAGE = 8
+GB = 1 << 30
+
+
+def _state_rows():
+    """Taylor moment state: dense vs int8 vs fp8 bytes/slot."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.models.lm import lm_prefill
+    from repro.serve import make_state_store
+
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
+    _, state = lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)
+
+    rows, per_slot = [], {}
+    for rep in ("dense", "int8", "fp8"):
+        kw = {} if rep == "dense" else {"state_dtype": rep}
+        store = make_state_store(cfg, SLOTS, N_MAX, jnp.dtype(cfg.dtype),
+                                 **kw)
+        caches = store.write_slot(store.init_caches(), state,
+                                  jnp.asarray(0, jnp.int32))
+        per_slot[rep] = store.slot_bytes(caches)
+        t_read = time_fn(
+            lambda: store.read_slot(caches, jnp.asarray(0, jnp.int32)))
+        reduction = per_slot["dense"] / per_slot[rep]
+        rows.append(emit(
+            f"memory_state_{rep}", t_read,
+            f"bytes_per_slot={per_slot[rep]};"
+            f"slots_per_gb={GB // per_slot[rep]};"
+            f"reduction_x={reduction:.2f}",
+        ))
+    assert per_slot["dense"] / per_slot["int8"] >= 2.5, (
+        f"int8 moment state must shrink bytes/slot >= 2.5x: dense "
+        f"{per_slot['dense']} vs int8 {per_slot['int8']}"
+    )
+    assert per_slot["dense"] / per_slot["fp8"] >= 2.5
+    return rows
+
+
+def _kv_rows():
+    """Softmax KV: mean live bytes, dense vs paged, on the bursty trace."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.serve import ServeEngine, bursty_trace, run_trace
+
+    cfg = get_reduced("smollm-135m").replace(attention="softmax")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    trace = bursty_trace(1, 14, cfg.vocab, prompt_len=(4, 20),
+                         new_tokens=(3, 10),
+                         calm_interarrival_s=0.002,
+                         burst_interarrival_s=0.0002)
+
+    rows, mean_live = [], {}
+    for rep in ("dense", "paged"):
+        kw = {} if rep == "dense" else {"kv_page_size": PAGE}
+        samples = []
+
+        def make(clock, _kw=kw):
+            return ServeEngine(params, cfg, max_slots=2, n_max=N_MAX,
+                               decode_block=4, clock=clock, **_kw)
+
+        def hook(eng, _s=samples):
+            _s.append(eng.live_state_bytes)
+
+        report = run_trace(make, trace, rep, step_hook=hook)
+        mean_live[rep] = sum(samples) / len(samples)
+        rows.append(emit(
+            f"memory_kv_{rep}", report.metrics["duration_virtual_s"] * 1e6,
+            f"mean_live_bytes={mean_live[rep]:.0f};"
+            f"peak_live_bytes={max(samples)};"
+            f"steps={len(samples)};"
+            f"reduction_x={mean_live['dense'] / mean_live[rep]:.2f}",
+        ))
+    assert mean_live["dense"] / mean_live["paged"] >= 2.0, (
+        f"paged KV must at least halve mean live bytes on the bursty "
+        f"trace: dense {mean_live['dense']:.0f} vs paged "
+        f"{mean_live['paged']:.0f}"
+    )
+    return rows
+
+
+def _error_rows():
+    """Quantisation error-vs-decode-length: the horizon table."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models import lm_init
+    from repro.models.lm import lm_decode_step, lm_init_caches
+    from repro.serve.state_repr import QuantizedCodec
+
+    steps, n_prompt = 24, 12
+    cfg = get_reduced("qwen2-1.5b")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    n_max = steps + n_prompt + 4
+
+    @functools.partial(jax.jit, static_argnames=("codec",))
+    def step_q(params, tok, caches, pos, codec):
+        logits, caches = lm_decode_step(params, tok, caches, pos, cfg)
+        if codec is not None:
+            caches = codec.decode(codec.encode(caches))
+        return logits, caches
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, n_prompt)),
+                         jnp.int32)
+
+    def decode(codec, forced=None):
+        """Greedy loop; with ``forced`` (the reference run's tokens) the
+        quantised run is teacher-forced so MAE measures STATE error,
+        not sequence divergence."""
+        caches = lm_init_caches(cfg, 1, n_max, jnp.dtype(cfg.dtype))
+        tok, logs, toks = None, [], []
+        for i in range(n_prompt + steps):
+            if i < n_prompt:
+                x = prompt[:, i]
+            elif forced is not None:
+                x = forced[i - n_prompt]
+            else:
+                x = tok
+            lg, caches = step_q(params, x, caches, jnp.asarray(i, jnp.int32),
+                                codec)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            toks.append(tok)
+            if i >= n_prompt - 1:
+                logs.append(np.asarray(lg[0]))
+        return logs, toks
+
+    ref, ref_toks = decode(None)
+    forced = ref_toks[n_prompt - 1:-1]  # token consumed at decode step i
+    rows, mae = [], {}
+    for qd in ("int8", "fp8"):
+        codec = QuantizedCodec(cfg=cfg, max_slots=1, n_max=n_max,
+                               dtype=str(cfg.dtype), qdtype=qd)
+        t_step = time_fn(lambda: step_q(
+            params, prompt[:, 0], lm_init_caches(cfg, 1, n_max,
+                                                 jnp.dtype(cfg.dtype)),
+            jnp.asarray(0, jnp.int32), codec))
+        maes = [float(np.abs(r - q).mean())
+                for r, q in zip(ref, decode(codec, forced)[0])]
+        mae[qd] = max(maes)
+        assert mae[qd] <= MAE_TOL[qd], \
+            f"{qd} teacher-forced MAE {mae[qd]:.3f} > {MAE_TOL[qd]}"
+        rows.append(emit(
+            f"memory_error_horizon_{qd}", t_step,
+            f"mae_step1={maes[0]:.4f};"
+            f"mae_step{steps}={maes[-1]:.4f};"
+            f"mae_max={mae[qd]:.4f};"
+            f"mae_tol={MAE_TOL[qd]};"
+            f"steps={steps}",
+        ))
+    assert mae["int8"] < mae["fp8"], \
+        "int8 must be the tighter format at these scales"
+    return rows
+
+
+def run():
+    """Executes the memory rows (state bytes, live KV, error horizon).
+
+    Returns:
+      List of ``name,us,derived`` CSV row strings for run.py aggregation.
+    """
+    return _state_rows() + _kv_rows() + _error_rows()
+
+
+if __name__ == "__main__":
+    import json
+    import pathlib
+
+    from benchmarks.run import _parse_rows
+
+    rows = run()
+    out = pathlib.Path(__file__).parent / "BENCH_memory.json"
+    out.write_text(json.dumps(_parse_rows(rows), indent=2) + "\n")
+    print(f"# wrote {out}")

@@ -4,8 +4,9 @@ The README carries GENERATED markdown tables — the backend×impl matrix
 (BENCH_attention.json), serve throughput (BENCH_serve.json), sharded-serve
 parity/overhead (BENCH_serve_sharded.json), resilience goodput
 (BENCH_resilience.json), the load-harness trace×policy metrics
-(BENCH_load.json) and the speculative-decoding rows
-(BENCH_speculative.json) — between marker comments:
+(BENCH_load.json), the speculative-decoding rows
+(BENCH_speculative.json) and the state-representation memory rows
+(BENCH_memory.json) — between marker comments:
 
     <!-- BEGIN GENERATED: <name> (benchmarks/render_tables.py --write) -->
     ...table...
@@ -247,6 +248,65 @@ def render_speculative() -> list:
     ]
 
 
+def render_memory() -> list:
+    """State-representation rows: Taylor moment bytes/slot (dense vs
+    int8 vs fp8), mean live KV bytes (dense vs paged on the bursty
+    trace), and the quantisation error table (BENCH_memory.json)."""
+    data = _load("BENCH_memory.json")
+    rows = []
+    for rep in ("dense", "int8", "fp8"):
+        key = f"memory_state_{rep}"
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        rows.append((
+            f"`{rep}`", d.get("bytes_per_slot", "—"),
+            d.get("slots_per_gb", "—"), d.get("reduction_x", "—"),
+            f"{data[key]['us_per_call']:.1f}",
+        ))
+    out = _table(
+        ["moment state", "bytes/slot", "slots/GB", "reduction",
+         "read_slot µs"],
+        rows,
+    )
+    kv_rows = []
+    for rep in ("dense", "paged"):
+        key = f"memory_kv_{rep}"
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        kv_rows.append((
+            f"`{rep}`", d.get("mean_live_bytes", "—"),
+            d.get("peak_live_bytes", "—"), d.get("reduction_x", "—"),
+        ))
+    out += [""] + _table(
+        ["softmax KV (bursty trace)", "mean live bytes", "peak live bytes",
+         "reduction"],
+        kv_rows,
+    )
+    err_rows = []
+    for qd in ("int8", "fp8"):
+        key = f"memory_error_horizon_{qd}"
+        if key not in data:
+            continue
+        d = _derived(data[key])
+        err_rows.append((
+            f"`{qd}`", d.get("mae_step1", "—"),
+            d.get(f"mae_step{d.get('steps', '?')}", "—"),
+            d.get("mae_max", "—"), d.get("mae_tol", "—"),
+        ))
+    return out + [""] + _table(
+        ["quantised state", "logit MAE @1", "MAE @last", "MAE max",
+         "pinned bound"],
+        err_rows,
+    ) + [
+        "",
+        "int8 ≥ 2.5x bytes/slot reduction, paged ≥ 2x mean live KV, and "
+        "the MAE bounds are machine-asserted in the bench AND pinned by "
+        "tests/test_state_quant.py.",
+    ]
+
+
 RENDERERS = {
     "backend-impl": render_backend_impl,
     "serve-throughput": render_serve,
@@ -254,6 +314,7 @@ RENDERERS = {
     "resilience": render_resilience,
     "load": render_load,
     "speculative": render_speculative,
+    "memory": render_memory,
 }
 
 

@@ -12,11 +12,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_resilience   — goodput/recovery under the standard fault trace
   bench_load         — arrival traces × scheduler policies (virtual clock)
   bench_speculative  — draft/verify decoding: dispatches-per-token < 1
+  bench_memory       — state representations: bytes/slot, live KV, error
 
 Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json``,
 ``BENCH_serve.json``, ``BENCH_serve_sharded.json``,
-``BENCH_resilience.json``, ``BENCH_load.json`` and
-``BENCH_speculative.json`` (name ->
+``BENCH_resilience.json``, ``BENCH_load.json``, ``BENCH_speculative.json``
+and ``BENCH_memory.json`` (name ->
 {us_per_call, derived}) next to this file so the backend, kernel and
 serving perf trajectories are machine-readable across PRs, not just
 printed.  Schema documented in README.md §Benchmarks; the README tables
@@ -49,6 +50,7 @@ def main() -> None:
         bench_kernel,
         bench_load,
         bench_longcontext,
+        bench_memory,
         bench_quality,
         bench_resilience,
         bench_serve,
@@ -61,11 +63,12 @@ def main() -> None:
     failures = []
     json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {},
                  "bench_serve_sharded": {}, "bench_resilience": {},
-                 "bench_load": {}, "bench_speculative": {}}
+                 "bench_load": {}, "bench_speculative": {},
+                 "bench_memory": {}}
     for mod in (bench_approx, bench_complexity, bench_attention, bench_kernel,
                 bench_longcontext, bench_quality, bench_serve,
                 bench_serve_sharded, bench_resilience, bench_load,
-                bench_speculative):
+                bench_speculative, bench_memory):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---")
         try:
@@ -81,7 +84,8 @@ def main() -> None:
                            ("bench_serve_sharded", "BENCH_serve_sharded.json"),
                            ("bench_resilience", "BENCH_resilience.json"),
                            ("bench_load", "BENCH_load.json"),
-                           ("bench_speculative", "BENCH_speculative.json")):
+                           ("bench_speculative", "BENCH_speculative.json"),
+                           ("bench_memory", "BENCH_memory.json")):
         if json_rows[name]:
             out_path = pathlib.Path(__file__).parent / out_name
             out_path.write_text(json.dumps(json_rows[name], indent=2) + "\n")

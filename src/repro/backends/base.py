@@ -32,6 +32,12 @@ config validation) never need backend-specific ``if`` chains:
     sharded, constant-size state exchanged).
   * ``impls``          — execution engines selectable via
     ``ModelConfig.attn_impl`` ("auto" resolves per platform/envelope).
+  * ``state_dtypes``   — slot-state representations the serve layer may
+    hold this backend's decode state in (``"dense"`` always; the Taylor
+    backend adds ``"int8"``/``"fp8"`` quantised moments).
+  * ``supports_paged_kv`` — the backend's ``state_kind="kv"`` slot cache
+    may be held paged (pow2 pages + per-slot page table) by the serve
+    layer (``serve/state_repr.py``).
 """
 
 from __future__ import annotations
@@ -59,6 +65,13 @@ class AttentionBackend:
     supports_cross: bool = False
     supports_cp: bool = False
     impls: Tuple[str, ...] = ("xla",)
+    # Serve-layer slot-state representations (docs/serving.md §Memory):
+    # which lossy/compact encodings of this backend's decode state the
+    # engine may hold between dispatches.  The compute path always runs
+    # dense (fp32 accumulate); these flags only gate what
+    # ``ServeEngine(state_dtype=..., kv_page_size=...)`` accepts.
+    state_dtypes: Tuple[str, ...] = ("dense",)
+    supports_paged_kv: bool = False
 
     # -- config validation / impl selection ---------------------------------
 

@@ -25,6 +25,9 @@ class LinearEluBackend(AttentionBackend):
     supports_cross = False
     supports_cp = False
     impls = ("xla",)
+    # Shares SoftmaxBackend's KVCache layout, so the serve layer's paged
+    # representation applies identically.
+    supports_paged_kv = True
 
     def init_cache(self, cfg, batch, n_max, dtype):
         return SoftmaxBackend.init_cache(self, cfg, batch, n_max, dtype)

@@ -59,6 +59,10 @@ class SoftmaxBackend(AttentionBackend):
     supports_cross = True
     supports_cp = False
     impls = ("xla",)
+    # The [slots, n_max] KV slot cache may be held paged (pow2 pages,
+    # per-slot page table) so short requests stop paying the n_max
+    # ceiling (serve/state_repr.py).
+    supports_paged_kv = True
 
     def init_cache(self, cfg, batch, n_max, dtype):
         hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim

@@ -68,6 +68,173 @@ class CrossCache(NamedTuple):
     kv: AttnCache
 
 
+class QuantizedLeaf(NamedTuple):
+    """One quantised decode-state tensor + its dequantisation scale.
+
+    ``q`` holds the payload in the storage dtype (int8 or
+    ``float8_e4m3fn``); ``scale`` is fp32 with the same leading
+    (slot/head) axes and size-1 trailing axes, so ``q * scale``
+    broadcasts back to the dense leaf.  Scales are exact powers of two
+    (see ``quantize_leaf``), which makes decode→encode→decode value
+    round-trips bit-exact — the property the serve layer's snapshot
+    handoff (preemption / speculative rollback) relies on."""
+
+    q: Array
+    scale: Array
+
+
+class PagedKVCache(NamedTuple):
+    """Page-pool form of one ``KVCache`` node (serve layer only).
+
+    ``k_pages``/``v_pages`` are ``[*lead, total_pages, hk, page_size,
+    hd]`` where ``*lead`` are the group stacking axes (``[n_groups,
+    run_len]``) or empty for tail nodes.  Which pages belong to which
+    serve slot lives in the single top-level ``PagedMeta`` of the slot
+    cache — every paged node shares one page table.  Free pages are kept
+    ZERO (pool init + clear both zero them), so gathering an unallocated
+    page id is equivalent to reading an unwritten dense cache row."""
+
+    k_pages: Array
+    v_pages: Array
+
+
+class PagedMeta(NamedTuple):
+    """Shared page table + per-slot lengths of a paged slot cache.
+
+    ``table`` is ``[slots, pages_per_slot]`` int32 with ``-1`` marking an
+    unallocated entry (allocated entries form a prefix of each row);
+    ``length`` is ``[slots]`` int32 — the per-slot valid-token count every
+    dense ``KVCache.length`` of the decoded tree broadcasts from."""
+
+    table: Array
+    length: Array
+
+
+# Mantissa budget per quantised storage dtype: scales are 2**(e - BITS)
+# with e from frexp(amax), so payload magnitudes land in [2**(BITS-1),
+# 2**BITS).  int8 uses 7 (round-to-int, clip at 127); fp8 e4m3 uses 8
+# and clips at 240 — the largest multiple of 16 that round-to-nearest
+# maps to itself, which keeps re-encoding a decoded leaf bit-exact.
+_QBITS = {"int8": 7, "fp8": 8}
+
+
+def quantize_leaf(x: Array, n_lead: int, qdtype: str) -> QuantizedLeaf:
+    """Quantise one dense state leaf with per-head pow2 scales.
+
+    The scale for each leading-axes index (slot, kv head, …) is
+    ``2**(frexp(amax) - BITS)`` — an exact power of two, so dequantised
+    values re-encode to themselves bit-for-bit: the serve layer may
+    decode, splice, and re-encode a slot cache any number of times
+    (snapshot handoff, verify rounds) without drift.  Non-finite ``amax``
+    propagates into the scale, so corrupted state stays visible to
+    ``state_health`` after the round-trip.
+
+    Args:
+      x: dense leaf; axes ``< n_lead`` are kept (slot/head), the rest are
+        reduced into one amax per head.
+      n_lead: number of leading axes to keep per-scale.
+      qdtype: ``"int8"`` or ``"fp8"``.
+
+    Returns:
+      ``QuantizedLeaf`` with ``q`` in the storage dtype and fp32
+      ``scale`` shaped like ``x`` with size-1 reduced axes.
+    """
+    bits = _QBITS[qdtype]
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(n_lead, x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    _, e = jnp.frexp(amax)
+    scale = jnp.exp2((e - bits).astype(jnp.float32))
+    scale = jnp.where(jnp.isfinite(amax), scale, amax)
+    y = xf / scale
+    if qdtype == "int8":
+        q = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -240.0, 240.0).astype(jnp.float8_e4m3fn)
+    return QuantizedLeaf(q=q, scale=scale)
+
+
+def dequantize_leaf(leaf: QuantizedLeaf, dtype=jnp.float32) -> Array:
+    """Dense fp leaf from a ``QuantizedLeaf`` (``q * scale``).
+
+    Args:
+      leaf: quantised leaf from ``quantize_leaf``.
+      dtype: output dtype (fp32 for the Taylor moment state — absorbs
+        and reads always accumulate full precision).
+
+    Returns:
+      Dense array of ``leaf.q.shape`` in ``dtype``.
+    """
+    return (leaf.q.astype(jnp.float32) * leaf.scale).astype(dtype)
+
+
+def gather_pages(pages: Array, table: Array, n_max: int) -> Array:
+    """Decode one paged pool leaf to its dense ``[*lead, slots, hk,
+    n_max, hd]`` form.
+
+    Unallocated table entries (``-1``) read as zeros — identical to an
+    unwritten dense cache row (free pages are also kept zero, so the
+    clamp-gather never leaks another slot's tokens).
+
+    Args:
+      pages: ``[*lead, total_pages, hk, page_size, hd]`` pool.
+      table: ``[slots, pages_per_slot]`` int32 page table (-1 = free).
+      n_max: dense per-slot capacity (``pages_per_slot * page_size`` may
+        overshoot it; the tail is sliced off).
+
+    Returns:
+      Dense ``[*lead, slots, hk, n_max, hd]`` array.
+    """
+    lead = pages.ndim - 4
+    total, hk, ps, hd = pages.shape[lead:]
+    slots, pp = table.shape
+    flat = table.reshape(-1)
+    out = jnp.take(pages, jnp.clip(flat, 0, total - 1), axis=lead)
+    valid = (flat >= 0).reshape((1,) * lead + (slots * pp, 1, 1, 1))
+    out = jnp.where(valid, out, jnp.zeros((), pages.dtype))
+    out = out.reshape(pages.shape[:lead] + (slots, pp, hk, ps, hd))
+    out = jnp.swapaxes(out, lead + 1, lead + 2)
+    out = out.reshape(pages.shape[:lead] + (slots, hk, pp * ps, hd))
+    return out[..., :n_max, :]
+
+
+def scatter_pages(dense: Array, pages: Array, table: Array) -> Array:
+    """Encode one dense ``[*lead, slots, hk, n_max, hd]`` leaf back into
+    its page pool.
+
+    The inverse of ``gather_pages`` over allocated entries: each slot's
+    token rows are split into pages and scattered to that slot's table
+    ids; rows belonging to unallocated entries are DROPPED (out-of-range
+    scatter), so a slot can never write outside its own pages.
+
+    Args:
+      dense: dense leaf (dtype is cast to the pool's).
+      pages: current ``[*lead, total_pages, hk, page_size, hd]`` pool.
+      table: ``[slots, pages_per_slot]`` int32 page table (-1 = free).
+
+    Returns:
+      Updated pool; pages of other slots (and free pages) bit-identical.
+    """
+    lead = dense.ndim - 4
+    total, hk, ps, hd = pages.shape[lead:]
+    slots, pp = table.shape
+    n_max = dense.shape[lead + 2]
+    pad = pp * ps - n_max
+    if pad:
+        width = [(0, 0)] * dense.ndim
+        width[lead + 2] = (0, pad)
+        dense = jnp.pad(dense, width)
+    x = dense.reshape(dense.shape[:lead] + (slots, hk, pp, ps, hd))
+    x = jnp.swapaxes(x, lead + 1, lead + 2)
+    x = x.reshape(dense.shape[:lead] + (slots * pp, hk, ps, hd))
+    flat = table.reshape(-1)
+    ids = jnp.where(flat >= 0, flat, total)  # out of range -> dropped
+    p = jnp.moveaxis(pages, lead, 0)
+    vals = jnp.moveaxis(x, lead, 0).astype(pages.dtype)
+    p = p.at[ids].set(vals, mode="drop")
+    return jnp.moveaxis(p, 0, lead)
+
+
 def kv_cache_pspec() -> KVCache:
     """Logical partition axes of a ``KVCache`` (the ``state_kind="kv"``
     decode-state sharding: slots over "dp", kv heads over "tp").

@@ -69,6 +69,10 @@ class TaylorBackend(AttentionBackend):
     supports_cross = True
     supports_cp = True
     impls = ("xla", "pallas")
+    # The O(1) moment state (S1/S2 dominate per-slot bytes) may be held
+    # int8/fp8-quantised between serve dispatches, with per-head per-leaf
+    # pow2 scales; absorb/read always run fp32 (serve/state_repr.py).
+    state_dtypes = ("dense", "int8", "fp8")
 
     def validate(self, cfg):
         super().validate(cfg)

@@ -213,7 +213,7 @@ def _resolve_logical_spec(
 
 def slot_cache_specs(
     cfg: Any, max_slots: int, n_max: int, mesh: Mesh, rules: Rules,
-    dtype: Any = None,
+    dtype: Any = None, state: Any = None,
 ) -> Any:
     """PartitionSpec pytree for the serve engine's slotted decode cache.
 
@@ -242,10 +242,17 @@ def slot_cache_specs(
       mesh: target mesh.
       rules: logical→physical axis rules (``rules_for_mesh(mesh)``).
       dtype: cache dtype (shapes only; defaults to ``cfg.dtype``).
+      state: optional ``serve.state_repr`` codec — the logical specs are
+        then transformed to the STORED representation (the codec's
+        ``logical_specs``: quantised payloads keep the dense moment
+        layout with replicated scales; page pools reuse the dense K/V
+        specs with a replicated page table) and shapes come from the
+        codec's ``init_stored``.  None (or a dense codec) = dense.
 
     Returns:
       Pytree of ``PartitionSpec`` congruent to the ``lm_init_caches``
-      output (use ``named_shardings`` to bind it to the mesh).
+      output — or to ``state.init_stored()`` when a non-dense codec is
+      given (use ``named_shardings`` to bind it to the mesh).
     """
     import jax.numpy as jnp  # noqa: PLC0415
 
@@ -254,9 +261,13 @@ def slot_cache_specs(
     from repro.models.lm import _runs, lm_init_caches  # noqa: PLC0415
 
     dtype = jnp.dtype(dtype or cfg.dtype)
-    cache_shapes = jax.eval_shape(
-        lambda: lm_init_caches(cfg, max_slots, n_max, dtype)
-    )
+    if state is not None and state.name != "dense":
+        cache_shapes = jax.eval_shape(state.init_stored)
+    else:
+        state = None
+        cache_shapes = jax.eval_shape(
+            lambda: lm_init_caches(cfg, max_slots, n_max, dtype)
+        )
     backend = resolve_backend(cfg)
 
     def one(kind: str):
@@ -286,6 +297,8 @@ def slot_cache_specs(
             P("dp", None, None) if cfg.family in ("vlm", "encdec") else None
         ),
     }
+    if state is not None:
+        logical = state.logical_specs(logical)
     return jax.tree_util.tree_map(
         lambda p, leaf: _resolve_logical_spec(p, leaf.shape, rules, mesh),
         logical,

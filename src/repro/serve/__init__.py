@@ -23,6 +23,12 @@ Speculative decoding (docs/serving.md §Speculative decoding): with
 round (``NgramProposer`` or the order-1 ``Order1SelfDraft``) and verify
 them in one chunked dispatch on the O(1) moment state — token-identical
 to plain decode, fewer dispatches per token.
+
+State representations (docs/serving.md §Memory): ``make_state_store`` /
+``SlotStateStore`` (state_repr.py) pick the on-device slot-state layout —
+dense fp32, int8/fp8-quantised Taylor moments, or paged softmax KV — and
+own the quantise/dequantise boundary so training and the single-request
+path stay fp32-dense.
 """
 
 from repro.serve.engine import (
@@ -76,6 +82,12 @@ from repro.serve.slots import (
     slot_health,
     write_slot,
 )
+from repro.serve.state_repr import (
+    PageAllocator,
+    SlotStateStore,
+    make_state_store,
+    wrap_cache_fn,
+)
 from repro.serve.speculative import (
     DraftProposer,
     NgramProposer,
@@ -97,6 +109,7 @@ __all__ = [
     "LoadReport",
     "NgramProposer",
     "Order1SelfDraft",
+    "PageAllocator",
     "PrefillStall",
     "QueueFlood",
     "QueueOverflow",
@@ -108,6 +121,7 @@ __all__ = [
     "SchedulerPolicy",
     "ServeEngine",
     "SlotCorruption",
+    "SlotStateStore",
     "Speculator",
     "Status",
     "Trace",
@@ -123,6 +137,7 @@ __all__ = [
     "generate_loop",
     "has_proposer",
     "init_slot_caches",
+    "make_state_store",
     "poisson_trace",
     "prefill",
     "prefill_chunked",
@@ -136,5 +151,6 @@ __all__ = [
     "slot_cache_shardings",
     "slot_health",
     "standard_trace",
+    "wrap_cache_fn",
     "write_slot",
 ]

@@ -212,11 +212,21 @@ def sample_tokens(
 # ---------------------------------------------------------------------------
 
 
-def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
+def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int,
+                    codec=None):
     """The (unjitted) ``steps``-token decode body shared by the
-    single-device and mesh-sharded compilations."""
+    single-device and mesh-sharded compilations.
+
+    With ``codec`` (a ``serve.state_repr`` state codec) the caches arrive
+    and leave in the STORED representation: the body decodes to dense
+    once per dispatch, runs the fp32-accumulate scan unmodified, and
+    re-encodes once at the end — quantisation/paging cost is per block,
+    not per token."""
 
     def scan_fn(params, caches, token, pos, active, temperature, top_k, eos_id, rng):
+        stored = caches
+        if codec is not None:
+            caches = codec.decode(stored)
         caches_in, active_in = caches, active
 
         def body(carry, _):
@@ -250,19 +260,23 @@ def _decode_scan_fn(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int
         from repro.serve.slots import select_slots  # noqa: PLC0415
 
         caches = select_slots(active_in, caches, caches_in)
+        if codec is not None:
+            caches = codec.encode(caches, stored)
         return caches, token, pos, active, rng, toks, mask
 
     return scan_fn
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool, max_top_k: int):
+def _jitted_decode_scan(cfg: ModelConfig, steps: int, sampling: bool,
+                        max_top_k: int, codec=None):
     """Compiled ``steps``-token decode over all slots (see ``decode_scan``).
 
     ``sampling``/``max_top_k`` are static specializations the scheduler
     derives host-side from the occupied slots: the all-greedy common case
-    compiles to a pure argmax body (no rng, no sort/top_k)."""
-    return jax.jit(_decode_scan_fn(cfg, steps, sampling, max_top_k),
+    compiles to a pure argmax body (no rng, no sort/top_k).  ``codec``
+    (hashable, frozen) keys the stored-representation variants."""
+    return jax.jit(_decode_scan_fn(cfg, steps, sampling, max_top_k, codec),
                    donate_argnums=(1,))
 
 
@@ -272,6 +286,7 @@ def build_decode_scan(
     sampling: bool,
     max_top_k: int,
     cache_shardings=None,
+    codec=None,
 ):
     """Compile one ``decode_scan`` variant, optionally mesh-sharded.
 
@@ -287,8 +302,11 @@ def build_decode_scan(
       steps: tokens per dispatch (static).
       sampling: static — False compiles the argmax-only body.
       max_top_k: static top-k bound (``-1`` = full-vocab sort fallback).
-      cache_shardings: ``NamedSharding`` pytree for the slotted cache, or
-        None for the single-device engine.
+      cache_shardings: ``NamedSharding`` pytree for the slotted cache
+        (STORED representation when a codec is active), or None for the
+        single-device engine.
+      codec: optional ``serve.state_repr`` codec — the caches flow
+        through the dispatch in their stored representation.
 
     Returns:
       A jitted callable with ``decode_scan``'s positional signature
@@ -296,12 +314,13 @@ def build_decode_scan(
       rng), caches donated.
     """
     if cache_shardings is None:
-        return _jitted_decode_scan(cfg, steps, bool(sampling), int(max_top_k))
+        return _jitted_decode_scan(cfg, steps, bool(sampling), int(max_top_k),
+                                   codec)
     mesh = jax.tree_util.tree_leaves(cache_shardings)[0].mesh
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     out_shardings = (cache_shardings, rep, rep, rep, rep, rep, rep)
     return jax.jit(
-        _decode_scan_fn(cfg, steps, bool(sampling), int(max_top_k)),
+        _decode_scan_fn(cfg, steps, bool(sampling), int(max_top_k), codec),
         donate_argnums=(1,),
         out_shardings=out_shardings,
     )

@@ -69,7 +69,6 @@ from repro.serve import speculative as spec_mod
 from repro.serve.engine import (
     _jitted_prefill,
     _jitted_prefill_chunk,
-    _jitted_slot_health,
     sample_tokens,
 )
 
@@ -416,6 +415,9 @@ class ServeEngine:
         sched: Optional[SchedulerPolicy] = None,
         fault_plan=None,
         clock: Optional[Callable[[], float]] = None,
+        state_dtype: str = "dense",
+        kv_page_size: Optional[int] = None,
+        kv_pages: Optional[int] = None,
     ):
         """Builds the engine and allocates the slotted cache.
 
@@ -457,6 +459,20 @@ class ServeEngine:
           clock: monotonic-seconds source for deadlines/TTL (defaults to
             ``time.monotonic``; tests and the load harness inject virtual
             clocks — ``serve.load.VirtualClock``).
+          state_dtype: slot-state storage dtype — "dense" (default) or a
+            quantised moment representation ("int8"/"fp8", backends
+            advertising it via ``state_dtypes``; the taylor backend's
+            S1/S2 moments dominate per-slot bytes).  Compute always runs
+            fp32-dense; only what the engine HOLDS between dispatches
+            changes (docs/serving.md §Memory).
+          kv_page_size: hold the KV slot cache PAGED with this pow2 page
+            size (KV-kind backends advertising ``supports_paged_kv``) —
+            per-slot page table, free-list allocator, live bytes
+            proportional to tokens actually held rather than
+            ``max_slots × n_max``.  Mutually exclusive with
+            ``state_dtype``.
+          kv_pages: paged-KV pool size in pages (default ``max_slots ×
+            ⌈n_max / kv_page_size⌉`` — never exhausts).
         """
         if max_slots < 1 or decode_block < 1:
             raise ValueError("max_slots and decode_block must be >= 1")
@@ -502,24 +518,25 @@ class ServeEngine:
             pshapes = jax.eval_shape(lambda: params)
             pspecs = param_specs(pshapes, mesh, self.rules)
             self.params = jax.device_put(params, named_shardings(pspecs, mesh))
-            self._cache_ns = slots_mod.slot_cache_shardings(
-                cfg, max_slots, n_max, mesh, self.rules, dtype
-            )
-            (self._write_slot, self._clear_slot, self._read_slot) = (
-                slots_mod.make_sharded_slot_ops(self._cache_ns)
-            )
-            with self._device_ctx():
-                self.caches = slots_mod.init_slot_caches(
-                    cfg, max_slots, n_max, dtype, mesh=mesh, rules=self.rules
-                )
         else:
             self.rules = None
             self.params = params
-            self._cache_ns = None
-            self._write_slot = slots_mod.write_slot
-            self._clear_slot = slots_mod.clear_slot
-            self._read_slot = slots_mod.read_slot
-            self.caches = slots_mod.init_slot_caches(cfg, max_slots, n_max, dtype)
+        # The state store owns the slot cache's STORAGE representation
+        # (dense / quantised moments / paged KV), its jitted slot ops and
+        # — on a mesh — the stored-layout shardings every cache-producing
+        # dispatch pins.  Validates state_dtype/kv_page_size against the
+        # backend's capability flags (fail fast at construction).
+        self.state_store = slots_mod.make_state_store(
+            cfg, max_slots, n_max, dtype, mesh=mesh, rules=self.rules,
+            state_dtype=state_dtype, kv_page_size=kv_page_size,
+            kv_pages=kv_pages,
+        )
+        self._cache_ns = self.state_store.shardings
+        self._write_slot = self.state_store.write_slot
+        self._clear_slot = self.state_store.clear_slot
+        self._read_slot = self.state_store.read_slot
+        with self._device_ctx():
+            self.caches = self.state_store.init_caches()
         self._scan_cache: Dict[Any, Any] = {}
         self._partial: Optional[_PartialPrefill] = None
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -559,16 +576,17 @@ class ServeEngine:
         """Per-engine compiled decode_scan variants (the sharded builds pin
         this engine's cache shardings, so the global lru cache of
         ``engine.decode_scan`` cannot be shared)."""
+        codec = self.state_store.jit_codec
         if self.mesh is None:
             return engine_mod._jitted_decode_scan(
-                self.cfg, steps, sampling, max_top_k
+                self.cfg, steps, sampling, max_top_k, codec
             )
         key = (steps, sampling, max_top_k)
         fn = self._scan_cache.get(key)
         if fn is None:
             fn = engine_mod.build_decode_scan(
                 self.cfg, steps, sampling, max_top_k,
-                cache_shardings=self._cache_ns,
+                cache_shardings=self._cache_ns, codec=codec,
             )
             self._scan_cache[key] = fn
         return fn
@@ -601,18 +619,10 @@ class ServeEngine:
         return fn
 
     def _corrupt_fn(self):
-        """Fault-injection slot corruption (mesh variant pinned + donated,
-        same argument as the slot ops)."""
-        if self.mesh is None:
-            return slots_mod.corrupt_slot
-        fn = self._scan_cache.get("corrupt")
-        if fn is None:
-            fn = jax.jit(
-                slots_mod._corrupt_slot_impl,
-                donate_argnums=(0,), out_shardings=self._cache_ns,
-            )
-            self._scan_cache["corrupt"] = fn
-        return fn
+        """Fault-injection slot corruption (representation-aware; the
+        store's mesh variant is pinned + donated, same argument as the
+        slot ops)."""
+        return self.state_store.corrupt_slot
 
     # -- submission ---------------------------------------------------------
 
@@ -884,6 +894,9 @@ class ServeEngine:
         tokens and the accepted prefix is replayed into the output."""
         req = tr.req
         with self._device_ctx():
+            self.caches = self.state_store.ensure_tokens(
+                self.caches, slot, prompt_len
+            )
             self.caches = self._write_slot(
                 self.caches, req_caches, jnp.asarray(slot, jnp.int32)
             )
@@ -994,6 +1007,9 @@ class ServeEngine:
         dispatch, token-identical by construction (tested)."""
         req = tr.req
         with self._device_ctx():
+            self.caches = self.state_store.ensure_tokens(
+                self.caches, slot, int(tr.saved_pos)
+            )
             self.caches = self._write_slot(
                 self.caches, tr.saved_state, jnp.asarray(slot, jnp.int32)
             )
@@ -1166,9 +1182,14 @@ class ServeEngine:
             for j, (g, t) in enumerate(zip(group, trs)):
                 slot = free.pop(0)
                 with self._device_ctx():
+                    # pref_caches is the DENSE batched prefill output —
+                    # slice with the dense read, not the store's
+                    # (representation-decoding) read_slot.
                     req_caches = (
                         pref_caches if len(group) == 1
-                        else self._read_slot(pref_caches, jnp.asarray(j, jnp.int32))
+                        else self.state_store.read_dense(
+                            pref_caches, jnp.asarray(j, jnp.int32)
+                        )
                     )
                 self._install(slot, g, t, req_caches, int(firsts[j]),
                               int(glen))
@@ -1231,10 +1252,9 @@ class ServeEngine:
                 self._requeue_for_retry(st.rid, list(st.out), error)
             self._slots[i] = _Slot()
         with self._device_ctx():
-            self.caches = slots_mod.init_slot_caches(
-                self.cfg, self.max_slots, self.n_max, self._cache_dtype,
-                mesh=self.mesh, rules=self.rules,
-            )
+            # Also resets the page allocator: every page returns to the
+            # free list alongside the re-zeroed pools.
+            self.caches = self.state_store.init_caches()
         self._token[:] = 0
         self._pos[:] = 0
         self._temp[:] = 0.0
@@ -1276,9 +1296,7 @@ class ServeEngine:
         if not occupied:
             return
         with self._device_ctx():
-            health = np.asarray(
-                _jitted_slot_health(self.cfg)(self.caches)
-            )
+            health = np.asarray(self.state_store.health(self.caches))
         self._stats["health_checks"] += 1
         if health.all():
             return
@@ -1379,6 +1397,14 @@ class ServeEngine:
         max_top_k = int(max((self._topk[i] for i in occupied), default=0))
         max_top_k = _next_pow2(max_top_k) if max_top_k > 0 else 0
         self._rng, sub = jax.random.split(self._rng)
+        if self.state_store.paged:
+            # Every active slot writes up to ``steps`` new KV rows this
+            # dispatch — grow its page prefix first (host-side table,
+            # pushed once if anything changed).
+            for i in np.flatnonzero(active):
+                self.caches = self.state_store.ensure_tokens(
+                    self.caches, int(i), int(self._pos[i]) + int(steps)
+                )
         scan_fn = self._decode_scan_fn(int(steps), bool(sampling), max_top_k)
         try:
             (self.caches, token, pos, dev_active, _, toks, mask) = (
@@ -1511,5 +1537,18 @@ class ServeEngine:
 
     @property
     def slot_state_bytes(self) -> int:
-        """Decode-state bytes one slot occupies (memory per admission)."""
-        return slots_mod.slot_bytes(self.caches, self.max_slots)
+        """Decode-state bytes one slot occupies (memory per admission).
+
+        Representation-aware LIVE accounting: the paged KV store counts
+        pages in use, not pool capacity, and the quantised stores count
+        the compressed payload + scales.  Dense state reproduces the
+        historical total-bytes / max_slots number exactly (regression-
+        pinned in tests/test_paged_kv.py)."""
+        return self.state_store.slot_bytes(self.caches)
+
+    @property
+    def live_state_bytes(self) -> int:
+        """Total decode-state bytes currently LIVE on device (the sum
+        ``slot_state_bytes`` averages; varies block to block for the
+        paged KV store as slots grow and release pages)."""
+        return self.state_store.live_bytes(self.caches)

@@ -17,6 +17,13 @@ Cache pytree layout (the exact structure ``lm_prefill`` returns):
 Per-slot state is O(1) in context length on the taylor backend (the paper's
 moment state) and O(n_max) on the softmax backend (bounded KV) — see
 DESIGN.md §Serving for the memory budget.
+
+This module is also the quantise/dequantise boundary for the compact
+slot-state representations (int8/fp8 Taylor moments, paged softmax KV):
+``SlotStateStore`` / ``make_state_store`` (re-exported from
+``serve/state_repr.py``) wrap these splice/zero/read ops so that
+everything above the slot layer — training, the single-request path, the
+model functions — only ever sees dense state (docs/serving.md §Memory).
 """
 
 from __future__ import annotations
@@ -78,7 +85,7 @@ def init_slot_caches(
 
 def slot_cache_shardings(
     cfg: ModelConfig, max_slots: int, n_max: int, mesh, rules=None,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, state=None,
 ):
     """``NamedSharding`` pytree for the slotted cache on ``mesh``.
 
@@ -94,6 +101,10 @@ def slot_cache_shardings(
       mesh: target mesh.
       rules: logical→physical axis rules (default ``rules_for_mesh``).
       dtype: cache dtype (shapes only).
+      state: optional ``serve.state_repr`` codec — shardings then follow
+        the STORED representation (quantised payloads keep the dense
+        leaf layout with replicated scales; page pools shard like the
+        dense K/V with a replicated page table).  None = dense.
 
     Returns:
       Pytree of ``NamedSharding`` congruent to the cache pytree.
@@ -105,7 +116,8 @@ def slot_cache_shardings(
     )
 
     rules = rules if rules is not None else dist.rules_for_mesh(mesh)
-    specs = slot_cache_specs(cfg, max_slots, n_max, mesh, rules, dtype)
+    specs = slot_cache_specs(cfg, max_slots, n_max, mesh, rules, dtype,
+                             state=state)
     return named_shardings(specs, mesh)
 
 
@@ -420,3 +432,18 @@ def slot_bytes(caches, max_slots: int) -> int:
         x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(caches)
     )
     return total // max_slots
+
+
+def __getattr__(name: str):
+    """Re-export the slot-state representation layer.
+
+    The quantise/dequantise boundary lives at the slot layer —
+    ``SlotStateStore``/``make_state_store`` are defined in
+    ``serve/state_repr.py`` (which builds on this module's splice/zero
+    ops) and surfaced here lazily to avoid a circular import.
+    """
+    if name in ("SlotStateStore", "make_state_store"):
+        from repro.serve import state_repr  # noqa: PLC0415
+
+        return getattr(state_repr, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -81,7 +81,7 @@ __all__ = [
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_verify(cfg: ModelConfig, width: int):
+def _jitted_verify(cfg: ModelConfig, width: int, codec=None):
     """Compiled verify over the full slotted batch (single-device).
 
     ``(params, caches, window [s, width], pos0 [s], mask [s]) ->
@@ -89,10 +89,15 @@ def _jitted_verify(cfg: ModelConfig, width: int):
     window token into masked slots' state (``select_slots`` keeps the
     others bit-identical) and returns per-position argmax for the
     accept-prefix comparison.  Caches donated: the verify fully replaces
-    them every round."""
-    return jax.jit(
-        functools.partial(_verify_impl, cfg=cfg), donate_argnums=(1,)
-    )
+    them every round.  With ``codec`` (hashable) the caches cross the
+    dispatch in their stored representation (quantised/paged) and the
+    verify itself runs dense inside the jit."""
+    impl = functools.partial(_verify_impl, cfg=cfg)
+    if codec is not None:
+        from repro.serve.state_repr import wrap_cache_fn  # noqa: PLC0415
+
+        impl = wrap_cache_fn(impl, codec)
+    return jax.jit(impl, donate_argnums=(1,))
 
 
 def _verify_impl(params, caches, window, pos0, mask, *, cfg):
@@ -584,16 +589,24 @@ class Speculator:
         shardings + replicate the greedy tokens, same donation argument as
         the decode scan)."""
         eng = self.eng
+        codec = eng.state_store.jit_codec
         if eng.mesh is None:
-            return _jitted_verify(eng.cfg, width)
+            return _jitted_verify(eng.cfg, width, codec)
         key = ("spec_verify", width)
         fn = eng._scan_cache.get(key)
         if fn is None:
             rep = jax.sharding.NamedSharding(
                 eng.mesh, jax.sharding.PartitionSpec()
             )
+            impl = functools.partial(_verify_impl, cfg=eng.cfg)
+            if codec is not None:
+                from repro.serve.state_repr import (  # noqa: PLC0415
+                    wrap_cache_fn,
+                )
+
+                impl = wrap_cache_fn(impl, codec)
             fn = jax.jit(
-                functools.partial(_verify_impl, cfg=eng.cfg),
+                impl,
                 donate_argnums=(1,),
                 out_shardings=(eng._cache_ns, rep),
             )
@@ -658,6 +671,13 @@ class Speculator:
             window[i, 1:] = props[i]
         mask = np.zeros((eng.max_slots,), bool)
         mask[slot_ids] = True
+        if eng.state_store.paged:
+            # The verify absorbs ``width`` window tokens per slot — grow
+            # each slot's page prefix before the dispatch writes them.
+            for i in slot_ids:
+                eng.caches = eng.state_store.ensure_tokens(
+                    eng.caches, i, int(eng._pos[i]) + width
+                )
         try:
             eng.caches, greedy = eng._dispatch(self._verify_fn(width), (
                 eng.params, eng.caches, jnp.asarray(window),

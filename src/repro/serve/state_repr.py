@@ -1,0 +1,969 @@
+"""Slot-state representations: quantised Taylor moments + paged KV.
+
+The serve engine's slotted cache (serve/slots.py) normally holds the
+backends' decode state DENSE — exactly the pytree ``lm_init_caches``
+builds.  This module adds two compact *storage* representations behind a
+codec boundary, chosen at engine construction
+(``ServeEngine(state_dtype=..., kv_page_size=...)``):
+
+  * ``QuantizedCodec`` — the Taylor backend's moment leaves (s0/z1/s1 and
+    the order-2 s2/z2, which dominate per-slot bytes) held int8 or fp8
+    with per-head per-leaf power-of-two scales (``backends/state.py``'s
+    ``quantize_leaf``).  ``n0`` stays raw fp32 (it is the health
+    invariant's token count).
+  * ``PagedKVCodec`` — the softmax-family ``[slots, n_max]`` KV slot
+    cache held as page pools (pow2 page size) plus ONE shared per-slot
+    page table, so short requests stop paying the ``n_max`` capacity
+    ceiling; a host-side ``PageAllocator`` owns the free list.
+
+The compute path never changes: every dispatch decodes to the dense tree,
+runs the unmodified prefill/decode/verify functions in fp32-accumulate,
+and re-encodes — training and the single-request path are untouched.
+Scales use exact powers of two, so decode→encode round-trips are
+bit-exact and the snapshot handoff contract (preemption, speculative
+rollback, quarantine re-prefill — docs/serving.md §Memory) holds for
+lossy state: a restored snapshot reproduces the exact pre-preemption
+tokens.
+
+``SlotStateStore`` (also exported via serve/slots.py — the slot layer is
+the quantise/dequantise boundary) bundles a codec with the jitted slot
+ops and mesh shardings, and is what the scheduler talks to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import resolve_backend
+from repro.backends.state import (
+    KVCache,
+    PagedKVCache,
+    PagedMeta,
+    QuantizedLeaf,
+    dequantize_leaf,
+    gather_pages,
+    quantize_leaf,
+    scatter_pages,
+)
+from repro.core import TaylorState
+from repro.models.config import ModelConfig
+from repro.models.lm import _runs, lm_init_caches
+from repro.serve.slots import (
+    _clear_slot_impl,
+    _corrupt_slot_impl,
+    _read_slot_impl,
+    _write_slot_impl,
+    init_slot_caches,
+    slot_health,
+)
+from repro.serve.slots import read_slot as _dense_read_slot
+
+Array = jax.Array
+
+
+def _apply_node(kind: str, fn, *nodes):
+    """Apply ``fn`` to one block-kind's cache node(s).
+
+    mamba state is never re-encoded (O(1) SSM state, dense always);
+    cross pairs transform only the SELF cache — the static cross source
+    (``CrossCache``) stays dense (it is written once at admission and
+    read-only after)."""
+    if kind == "mamba":
+        return nodes[0]
+    if kind == "cross":
+        return (fn(*[n[0] for n in nodes]),) + tuple(nodes[0][1:])
+    return fn(*nodes)
+
+
+def _map_state_nodes(cfg: ModelConfig, fn, *trees) -> Dict[str, Any]:
+    """Walk slotted-cache pytrees per backend NODE (not per leaf).
+
+    The codec building block: applies ``fn`` to each attention-state node
+    (``TaylorState`` / ``KVCache`` / their encoded forms) of one or more
+    structurally-congruent cache trees, using the same per-run-kind
+    dispatch ``lm_init_caches`` used to build them.  ``kv_src`` (and any
+    extra top-level keys of ``trees[0]``) pass through untouched.
+
+    Args:
+      cfg: model config (``pattern``/``tail`` decide the node kinds).
+      fn: callable taking one node per input tree, returning the mapped
+        node.
+      *trees: one or more ``{"group", "tail", ...}`` cache pytrees.
+
+    Returns:
+      A new dict with ``group``/``tail`` rebuilt from ``fn``'s outputs.
+    """
+    out = dict(trees[0])
+    kinds = [k for k, _ in _runs(cfg.pattern)]
+    out["group"] = tuple(
+        _apply_node(kind, fn, *nodes)
+        for kind, nodes in zip(kinds, zip(*[t["group"] for t in trees]))
+    )
+    out["tail"] = tuple(
+        _apply_node(kind, fn, *nodes)
+        for kind, nodes in zip(cfg.tail, zip(*[t["tail"] for t in trees]))
+    )
+    return out
+
+
+def wrap_cache_fn(fn, codec: "StateCodec"):
+    """Wrap a ``(params, caches, *rest) -> (caches, *outs)`` cache
+    function so it runs dense inside a stored-representation boundary.
+
+    The engine threads this around the decode scan and the speculative
+    verify chunk: the wrapped function decodes the stored tree, runs
+    ``fn`` unmodified on the dense tree, and re-encodes the returned
+    cache — so quantisation/paging stay invisible to every compute path.
+
+    Args:
+      fn: cache-transforming function whose FIRST output is the updated
+        dense cache pytree.
+      codec: the representation codec.
+
+    Returns:
+      Callable with the same signature over stored trees.
+    """
+
+    def wrapped(params, stored, *rest):
+        out = fn(params, codec.decode(stored), *rest)
+        return (codec.encode(out[0], stored),) + tuple(out[1:])
+
+    return wrapped
+
+
+@dataclasses.dataclass(frozen=True)
+class StateCodec:
+    """Base slot-state codec: dense ⇄ stored representation.
+
+    Frozen and hashable (``cfg`` is a frozen dataclass, ``dtype`` a
+    canonical dtype NAME string), so codecs double as jit/lru cache keys.
+    Subclasses implement ``decode``/``encode``/``init_stored``; the
+    ``*_impl`` slot ops default to decode → dense op → encode (what the
+    paged codec uses — a page gather/scatter is the decode), and may be
+    overridden with leaf-level versions (the quantised codec's ops never
+    materialise the full dense cache).
+    """
+
+    cfg: ModelConfig
+    max_slots: int
+    n_max: int
+    dtype: str  # canonical dtype name, e.g. "bfloat16"
+
+    name = "base"
+
+    @property
+    def dtype_obj(self):
+        """The cache dtype as a ``jnp.dtype`` (stored as a name string so
+        the dataclass stays hashable)."""
+        return jnp.dtype(self.dtype)
+
+    def decode(self, stored):
+        """Stored tree → dense ``{"group", "tail", "kv_src"}`` tree."""
+        raise NotImplementedError
+
+    def encode(self, dense, stored):
+        """Dense tree → stored tree (``stored`` supplies representation
+        metadata such as page pools/tables; quantisation ignores it)."""
+        raise NotImplementedError
+
+    def init_stored(self):
+        """Zero-initialised stored-representation cache (traceable — used
+        under ``jax.eval_shape`` by the sharding resolver)."""
+        raise NotImplementedError
+
+    def logical_specs(self, logical):
+        """Map the dense logical ``PartitionSpec`` tree to the stored
+        structure (scales/page tables replicated, payload as the dense
+        leaves — docs/serving.md §Memory).
+
+        Args:
+          logical: dense logical-spec pytree from
+            ``distributed.sharding.slot_cache_specs``.
+
+        Returns:
+          Spec pytree congruent with ``init_stored()``'s output.
+        """
+        return logical
+
+    # -- stored-tree slot ops (jitted by SlotStateStore) ---------------------
+
+    def write_impl(self, stored, dense_b1, slot: Array):
+        """Splice a batch-1 DENSE request cache into slot ``slot`` of the
+        stored tree (generic: decode → splice → encode)."""
+        return self.encode(
+            _write_slot_impl(self.decode(stored), dense_b1, slot), stored
+        )
+
+    def clear_impl(self, stored, slot: Array):
+        """Zero one slot inside the stored tree (runs BEFORE any host
+        page release, so freed pages are device-zeroed)."""
+        return self.encode(_clear_slot_impl(self.decode(stored), slot), stored)
+
+    def read_impl(self, stored, slot: Array):
+        """Extract one slot as a batch-1 DENSE cache (the snapshot the
+        scheduler saves on preemption / speculative rollback)."""
+        return _read_slot_impl(self.decode(stored), slot)
+
+    def corrupt_impl(self, stored, slot: Array, fill):
+        """Poison one slot's inexact leaves with ``fill`` (fault
+        injection; must stay visible to ``health_impl``)."""
+        return self.encode(
+            _corrupt_slot_impl(self.decode(stored), slot, fill), stored
+        )
+
+    def health_impl(self, stored) -> Array:
+        """Per-slot backend ``state_health`` of the decoded tree."""
+        return slot_health(self.decode(stored), self.cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCodec(StateCodec):
+    """Identity codec — the stored representation IS the dense tree.
+
+    Exists so mesh op construction is uniform; single-device dense
+    serving bypasses it entirely (module-level ops in serve/slots.py).
+    """
+
+    name = "dense"
+
+    def decode(self, stored):
+        return stored
+
+    def encode(self, dense, stored):
+        return dense
+
+    def init_stored(self):
+        return lm_init_caches(self.cfg, self.max_slots, self.n_max,
+                              self.dtype_obj)
+
+    def write_impl(self, stored, dense_b1, slot: Array):
+        return _write_slot_impl(stored, dense_b1, slot)
+
+    def clear_impl(self, stored, slot: Array):
+        return _clear_slot_impl(stored, slot)
+
+    def read_impl(self, stored, slot: Array):
+        return _read_slot_impl(stored, slot)
+
+    def corrupt_impl(self, stored, slot: Array, fill):
+        return _corrupt_slot_impl(stored, slot, fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedCodec(StateCodec):
+    """int8 / fp8 Taylor moment state with per-head pow2 scales.
+
+    Every ``TaylorState`` node's moment leaves (s0, z1, s1, z2, s2)
+    become ``QuantizedLeaf``s; ``n0`` stays fp32.  The slot ops are
+    leaf-level overrides — writes quantise only the incoming batch-1
+    state and splice it, reads dequantise only the sliced slot — so no
+    op ever materialises the full dense cache.
+    """
+
+    qdtype: str = "int8"  # "int8" | "fp8"
+
+    @property
+    def name(self) -> str:
+        """Representation name (the ``state_dtype`` value)."""
+        return self.qdtype
+
+    def _q_node(self, node):
+        if not isinstance(node, TaylorState):
+            return node
+        n_lead = node.n0.ndim  # through the kv-head axis
+
+        def q(x):
+            return None if x is None else quantize_leaf(x, n_lead, self.qdtype)
+
+        return TaylorState(n0=node.n0, s0=q(node.s0), z1=q(node.z1),
+                           s1=q(node.s1), z2=q(node.z2), s2=q(node.s2))
+
+    def _dq_node(self, node):
+        if not (isinstance(node, TaylorState)
+                and isinstance(node.s0, QuantizedLeaf)):
+            return node
+
+        def d(leaf):
+            return None if leaf is None else dequantize_leaf(leaf)
+
+        return TaylorState(n0=node.n0, s0=d(node.s0), z1=d(node.z1),
+                           s1=d(node.s1), z2=d(node.z2), s2=d(node.s2))
+
+    def decode(self, stored):
+        """Dequantise every moment node back to dense fp32.
+
+        Args:
+          stored: quantised slotted (or batch-1) cache pytree.
+
+        Returns:
+          Dense cache pytree (``q * scale`` per leaf, fp32).
+        """
+        return _map_state_nodes(self.cfg, self._dq_node, stored)
+
+    def encode(self, dense, stored=None):
+        """Quantise every moment node (``stored`` is unused — the
+        representation carries no cross-call metadata).
+
+        Args:
+          dense: dense slotted (or batch-1) cache pytree.
+          stored: ignored.
+
+        Returns:
+          Cache pytree with ``QuantizedLeaf`` moment leaves.
+        """
+        del stored
+        return _map_state_nodes(self.cfg, self._q_node, dense)
+
+    def init_stored(self):
+        """Quantised zero cache (all-zero leaves get the stable minimum
+        pow2 scale — see ``quantize_leaf``).
+
+        Returns:
+          Stored-representation cache for ``max_slots`` slots.
+        """
+        return self.encode(
+            lm_init_caches(self.cfg, self.max_slots, self.n_max,
+                           self.dtype_obj)
+        )
+
+    def logical_specs(self, logical):
+        """Payload ``q`` keeps the dense leaf's spec; scales replicate.
+
+        Args:
+          logical: dense logical-spec pytree.
+
+        Returns:
+          Spec pytree congruent with the quantised cache.
+        """
+        rep = jax.sharding.PartitionSpec()
+
+        def fn(node):
+            if not isinstance(node, TaylorState):
+                return node
+
+            def q(spec):
+                return None if spec is None else QuantizedLeaf(q=spec, scale=rep)
+
+            return TaylorState(n0=node.n0, s0=q(node.s0), z1=q(node.z1),
+                               s1=q(node.s1), z2=q(node.z2), s2=q(node.s2))
+
+        return _map_state_nodes(self.cfg, fn, logical)
+
+    # Leaf-level ops: the stored tree has the same slot axes as the dense
+    # one (keepdims scales), so the generic splice/zero/poison impls
+    # apply DIRECTLY to the quantised leaves.
+
+    def write_impl(self, stored, dense_b1, slot: Array):
+        return _write_slot_impl(stored, self.encode(dense_b1), slot)
+
+    def clear_impl(self, stored, slot: Array):
+        return _clear_slot_impl(stored, slot)
+
+    def read_impl(self, stored, slot: Array):
+        return self.decode(_read_slot_impl(stored, slot))
+
+    def corrupt_impl(self, stored, slot: Array, fill):
+        # Poisons scales + n0 (+ the fp8 payload — int8 is integer and
+        # skipped); q * NaN-scale decodes to NaN, so corruption survives
+        # the representation and health_impl still flags the slot.
+        return _corrupt_slot_impl(stored, slot, fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVCodec(StateCodec):
+    """Paged storage for the softmax-family KV slot cache.
+
+    Each ``KVCache`` node's ``[*lead, slots, hk, n_max, hd]`` K/V pair
+    becomes a ``PagedKVCache`` page pool ``[*lead, total_pages, hk,
+    page_size, hd]``; ONE ``PagedMeta`` (page table ``[slots,
+    pages_per_slot]`` + per-slot lengths) at the cache's top level is
+    shared by every node — all layers of a slot grow in lockstep, so one
+    table suffices.  Page ownership is host-side (``PageAllocator``);
+    the codec only gathers/scatters along the current table.
+    """
+
+    page_size: int = 0
+    total_pages: int = 0
+
+    name = "paged"
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Table width: pages needed to back ``n_max`` tokens."""
+        return -(-self.n_max // self.page_size)
+
+    def decode(self, stored):
+        """Gather every page pool back to the dense ``[slots, n_max]``
+        layout (unallocated entries read as zeros).
+
+        The ``"paged"`` metadata key is dropped — the dense tree is
+        exactly the ``{"group", "tail", "kv_src"}`` structure the model
+        functions (and ``select_slots``, which rebuilds that dict)
+        expect.
+
+        Args:
+          stored: paged slotted cache pytree (with ``"paged"`` meta).
+
+        Returns:
+          Dense cache pytree.
+        """
+        meta = stored["paged"]
+        rest = {k: v for k, v in stored.items() if k != "paged"}
+
+        def fn(node):
+            if not isinstance(node, PagedKVCache):
+                return node
+            lead = node.k_pages.shape[:node.k_pages.ndim - 4]
+            return KVCache(
+                k=gather_pages(node.k_pages, meta.table, self.n_max),
+                v=gather_pages(node.v_pages, meta.table, self.n_max),
+                length=jnp.broadcast_to(meta.length,
+                                        lead + (self.max_slots,)),
+            )
+
+        return _map_state_nodes(self.cfg, fn, rest)
+
+    def encode(self, dense, stored):
+        """Scatter every dense KV node into its page pool along the
+        CURRENT table; rows of unallocated entries are dropped (a slot
+        can never write outside its own pages).
+
+        Args:
+          dense: dense slotted cache pytree.
+          stored: previous stored tree (supplies pools + page table).
+
+        Returns:
+          Stored tree with updated pools and per-slot lengths (taken
+          from the first KV node — lengths are identical across layers).
+        """
+        meta = stored["paged"]
+        rest = {k: v for k, v in stored.items() if k != "paged"}
+        length: List[Optional[Array]] = [None]
+
+        def fn(dnode, snode):
+            if not isinstance(snode, PagedKVCache):
+                return dnode
+            if length[0] is None:
+                l = dnode.length
+                length[0] = l.reshape((-1, l.shape[-1]))[0].astype(jnp.int32)
+            return PagedKVCache(
+                k_pages=scatter_pages(dnode.k, snode.k_pages, meta.table),
+                v_pages=scatter_pages(dnode.v, snode.v_pages, meta.table),
+            )
+
+        out = _map_state_nodes(self.cfg, fn, dense, rest)
+        out["paged"] = PagedMeta(
+            table=meta.table,
+            length=meta.length if length[0] is None else length[0],
+        )
+        return out
+
+    def init_stored(self):
+        """Zero page pools + an all-free (-1) table.
+
+        Free pages being zero is an invariant ``clear_impl`` maintains
+        (device-zero before host release), so gathering a stale id can
+        never observe another request's tokens.
+
+        Returns:
+          Stored-representation cache for ``max_slots`` slots.
+        """
+        dense = lm_init_caches(self.cfg, self.max_slots, self.n_max,
+                               self.dtype_obj)
+
+        def fn(node):
+            if not isinstance(node, KVCache):
+                return node
+
+            def pool(x):
+                return jnp.zeros(
+                    x.shape[:-4] + (self.total_pages, x.shape[-3],
+                                    self.page_size, x.shape[-1]),
+                    x.dtype,
+                )
+
+            return PagedKVCache(k_pages=pool(node.k), v_pages=pool(node.v))
+
+        out = _map_state_nodes(self.cfg, fn, dense)
+        out["paged"] = PagedMeta(
+            table=jnp.full((self.max_slots, self.pages_per_slot), -1,
+                           jnp.int32),
+            length=jnp.zeros((self.max_slots,), jnp.int32),
+        )
+        return out
+
+    def logical_specs(self, logical):
+        """Page pools reuse the dense K/V specs verbatim (same rank —
+        "dp" lands on the page axis, with the resolver's divisibility
+        fallback to replicated); the table/lengths replicate.
+
+        Args:
+          logical: dense logical-spec pytree.
+
+        Returns:
+          Spec pytree congruent with the paged cache.
+        """
+        rep = jax.sharding.PartitionSpec()
+
+        def fn(node):
+            if not isinstance(node, KVCache):
+                return node
+            return PagedKVCache(k_pages=node.k, v_pages=node.v)
+
+        out = _map_state_nodes(self.cfg, fn, logical)
+        out["paged"] = PagedMeta(table=rep, length=rep)
+        return out
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the paged KV representation.
+
+    Owns which pool pages back which serve slot; the device only ever
+    sees the resulting int32 table.  Pages are allocated as a prefix of
+    each slot's table row (``ensure``) and returned wholesale on release.
+    Invariant (asserted by tests/test_paged_kv.py): every page is either
+    on the free list or in exactly one table row —
+    ``len(free) + (table >= 0).sum() == total_pages`` with no duplicates.
+    """
+
+    def __init__(self, max_slots: int, pages_per_slot: int, total_pages: int,
+                 page_size: int, n_max: int):
+        self.max_slots = max_slots
+        self.pages_per_slot = pages_per_slot
+        self.total_pages = total_pages
+        self.page_size = page_size
+        self.n_max = n_max
+        self.free: List[int] = []
+        self.table = np.full((max_slots, pages_per_slot), -1, np.int32)
+        self.reset()
+
+    def reset(self) -> None:
+        """Return every page to the free list and blank the table (slot
+        cache rebuild after device loss — the pools are re-zeroed there
+        too, so the free-pages-are-zero invariant holds)."""
+        self.free = list(range(self.total_pages - 1, -1, -1))
+        self.table[:] = -1
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow slot ``slot``'s page prefix to cover ``n_tokens`` tokens.
+
+        Args:
+          slot: slot index.
+          n_tokens: tokens the slot must be able to hold (clamped to
+            ``n_max`` — the dense capacity ceiling).
+
+        Returns:
+          True if the table changed (caller must push it to device).
+
+        Raises:
+          RuntimeError: the pool is exhausted (with the default pool size
+            ``max_slots * pages_per_slot`` this cannot happen).
+        """
+        need = -(-min(int(n_tokens), self.n_max) // self.page_size)
+        need = min(need, self.pages_per_slot)
+        row = self.table[slot]
+        have = int((row >= 0).sum())
+        if need <= have:
+            return False
+        for j in range(have, need):
+            if not self.free:
+                raise RuntimeError(
+                    f"paged KV pool exhausted: slot {slot} needs page "
+                    f"{j + 1}/{need} but all {self.total_pages} pages are "
+                    "allocated (raise kv_pages)"
+                )
+            row[j] = self.free.pop()
+        return True
+
+    def release(self, slot: int) -> bool:
+        """Return all of slot ``slot``'s pages to the free list.
+
+        Must run AFTER the device-side clear (which zeroes the pages
+        through the old table), so freed pages re-enter the pool zeroed.
+
+        Args:
+          slot: slot index.
+
+        Returns:
+          True if the table changed.
+        """
+        row = self.table[slot]
+        ids = row[row >= 0]
+        if ids.size == 0:
+            return False
+        self.free.extend(int(i) for i in ids)
+        row[:] = -1
+        return True
+
+    @property
+    def used_pages(self) -> int:
+        """Pages currently backing live slots."""
+        return self.total_pages - len(self.free)
+
+
+# Non-dense single-device slot ops are shared process-wide (codecs are
+# frozen/hashable), mirroring the module-level jits in serve/slots.py —
+# the test suite builds many engines over the same few configs.
+@functools.lru_cache(maxsize=64)
+def _global_op(codec: StateCodec, name: str):
+    impl = getattr(codec, f"{name}_impl")
+    if name in ("write", "clear", "corrupt"):
+        return jax.jit(impl, donate_argnums=(0,))
+    return jax.jit(impl)
+
+
+class SlotStateStore:
+    """The scheduler's handle on the slot cache's storage representation.
+
+    Bundles a codec (None = dense) with the page allocator, mesh
+    shardings and the jitted slot ops, so the engine has ONE object to
+    ask for writes/reads/clears/health regardless of representation.
+    The dense single-device store delegates to the shared module-level
+    ops in serve/slots.py (preserving their process-wide jit caches);
+    non-dense single-device ops share a global cache keyed by the frozen
+    codec; mesh ops are per-store jits pinned to the cache shardings
+    with the stored tree donated.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, n_max: int,
+                 dtype=jnp.bfloat16, mesh=None, rules=None,
+                 codec: Optional[StateCodec] = None,
+                 allocator: Optional[PageAllocator] = None):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.n_max = n_max
+        self.dtype = dtype
+        self.mesh = mesh
+        self.rules = rules
+        self.codec = codec
+        self.allocator = allocator
+        self.shardings = None
+        self._mesh_ops: Dict[str, Any] = {}
+        if mesh is not None:
+            from repro.serve.slots import slot_cache_shardings  # noqa: PLC0415
+
+            self.shardings = slot_cache_shardings(
+                cfg, max_slots, n_max, mesh, rules, dtype, state=codec
+            )
+
+    # -- representation queries ----------------------------------------------
+
+    @property
+    def name(self) -> str:
+        """Representation name: "dense", "int8", "fp8" or "paged"."""
+        return "dense" if self.codec is None else self.codec.name
+
+    @property
+    def paged(self) -> bool:
+        """True when the KV cache is paged (an allocator is attached)."""
+        return self.allocator is not None
+
+    @property
+    def jit_codec(self) -> Optional[StateCodec]:
+        """The codec the engine must thread around cache-carrying jits
+        (decode scan, speculative verify); None for dense state."""
+        return self.codec
+
+    # -- ops -----------------------------------------------------------------
+
+    def _mesh_codec(self) -> StateCodec:
+        if self.codec is not None:
+            return self.codec
+        return DenseCodec(cfg=self.cfg, max_slots=self.max_slots,
+                          n_max=self.n_max, dtype=jnp.dtype(self.dtype).name)
+
+    def _op(self, name: str):
+        if self.mesh is None:
+            if self.codec is None:
+                from repro.serve import engine as engine_mod  # noqa: PLC0415
+                from repro.serve import slots as slots_mod  # noqa: PLC0415
+
+                if name == "health":
+                    return engine_mod._jitted_slot_health(self.cfg)
+                return {"write": slots_mod.write_slot,
+                        "clear": slots_mod.clear_slot,
+                        "read": slots_mod.read_slot,
+                        "corrupt": slots_mod.corrupt_slot}[name]
+            return _global_op(self.codec, name)
+        if name not in self._mesh_ops:
+            impl = getattr(self._mesh_codec(), f"{name}_impl")
+            if name in ("write", "clear", "corrupt"):
+                f = jax.jit(impl, donate_argnums=(0,),
+                            out_shardings=self.shardings)
+            else:
+                # read yields a batch-1 tree, health a [slots] vector —
+                # output shardings derive from the inputs; no donation.
+                f = jax.jit(impl)
+            self._mesh_ops[name] = f
+        return self._mesh_ops[name]
+
+    def init_caches(self):
+        """Freshly-zeroed stored-representation slot cache (also resets
+        the page allocator — used at construction and after device-loss
+        rebuild).
+
+        Returns:
+          The stored cache pytree for ``max_slots`` slots (mesh-sharded
+          when the store was built with a mesh).
+        """
+        if self.allocator is not None:
+            self.allocator.reset()
+        if self.codec is None:
+            return init_slot_caches(self.cfg, self.max_slots, self.n_max,
+                                    self.dtype, self.mesh, self.rules)
+        if self.mesh is None:
+            return jax.jit(self.codec.init_stored)()
+        return jax.jit(self.codec.init_stored,
+                       out_shardings=self.shardings)()
+
+    def write_slot(self, caches, dense_b1, slot):
+        """Splice a batch-1 DENSE request cache (prefill output or a
+        ``read_slot`` snapshot) into slot ``slot``, encoding it into the
+        stored representation.
+
+        Args:
+          caches: stored slot cache (donated).
+          dense_b1: batch-1 dense cache pytree.
+          slot: int32 scalar slot index.
+
+        Returns:
+          Updated stored cache; other slots bit-identical.
+        """
+        return self._op("write")(caches, dense_b1, slot)
+
+    def read_slot(self, caches, slot):
+        """One slot as a batch-1 DENSE cache — the snapshot contract:
+        for lossy representations this returns the dequantised state,
+        and writing it back reproduces the stored bits exactly (pow2
+        scales), so preemption/rollback round-trips are token-identical.
+
+        Args:
+          caches: stored slot cache.
+          slot: int32 scalar slot index.
+
+        Returns:
+          Batch-1 dense cache pytree.
+        """
+        return self._op("read")(caches, slot)
+
+    def read_dense(self, dense_caches, slot):
+        """Slice one row out of an already-DENSE cache tree (the batched
+        prefill output in ``_admit`` — which never passes through the
+        stored representation).
+
+        Args:
+          dense_caches: dense cache pytree (NOT the stored slot cache).
+          slot: int32 scalar row index.
+
+        Returns:
+          Batch-1 dense cache pytree.
+        """
+        return _dense_read_slot(dense_caches, slot)
+
+    def clear_slot(self, caches, slot):
+        """Zero one slot and (when paged) return its pages to the pool.
+
+        Device-side zeroing runs FIRST, through the slot's current page
+        table — so released pages re-enter the free list zeroed and the
+        gather-of-free-page-is-zero invariant survives reuse.
+
+        Args:
+          caches: stored slot cache (donated).
+          slot: int32 scalar slot index (a Python int is accepted).
+
+        Returns:
+          Updated stored cache.
+        """
+        out = self._op("clear")(caches, slot)
+        if self.allocator is not None and self.allocator.release(int(slot)):
+            out = self._push_table(out)
+        return out
+
+    def corrupt_slot(self, caches, slot, fill):
+        """Poison one slot's inexact leaves (fault injection — the
+        representation must keep the corruption visible to ``health``).
+
+        Args:
+          caches: stored slot cache (donated).
+          slot: int32 scalar slot index.
+          fill: scalar poison value (NaN/Inf).
+
+        Returns:
+          Updated stored cache.
+        """
+        return self._op("corrupt")(caches, slot, fill)
+
+    def health(self, caches) -> Array:
+        """Per-slot ``state_health`` of the decoded cache.
+
+        Args:
+          caches: stored slot cache.
+
+        Returns:
+          ``[max_slots]`` bool.
+        """
+        return self._op("health")(caches)
+
+    def ensure_tokens(self, caches, slot: int, n_tokens: int):
+        """Guarantee slot ``slot`` has pages for ``n_tokens`` tokens
+        (no-op for non-paged stores); pushes the table to device only
+        when it changed.
+
+        Args:
+          caches: stored slot cache.
+          slot: slot index (host int).
+          n_tokens: tokens the slot must hold (clamped to ``n_max``).
+
+        Returns:
+          The (possibly table-refreshed) stored cache.
+        """
+        if self.allocator is None:
+            return caches
+        if self.allocator.ensure(int(slot), int(n_tokens)):
+            return self._push_table(caches)
+        return caches
+
+    def _push_table(self, caches):
+        table = jnp.asarray(self.allocator.table)
+        if self.mesh is not None:
+            table = jax.device_put(table, self.shardings["paged"].table)
+        out = dict(caches)
+        out["paged"] = PagedMeta(table=table, length=caches["paged"].length)
+        return out
+
+    # -- accounting ----------------------------------------------------------
+
+    def live_bytes(self, caches) -> int:
+        """Decode-state bytes actually LIVE on device.
+
+        Dense/quantised state is fully resident (allocated == live); for
+        the paged representation the pool counts only pages in use —
+        the number ``serve_slot_state_bytes`` must report so operators
+        see paging's win, not the pool's capacity.
+
+        Args:
+          caches: stored slot cache.
+
+        Returns:
+          Live bytes (int).
+        """
+        def nbytes(t):
+            return sum(x.size * x.dtype.itemsize
+                       for x in jax.tree_util.tree_leaves(t))
+
+        total = nbytes(caches)
+        if self.allocator is None:
+            return total
+        pool_bytes = 0
+
+        def fn(node):
+            nonlocal pool_bytes
+            if isinstance(node, PagedKVCache):
+                pool_bytes += nbytes(tuple(node))
+            return node
+
+        _map_state_nodes(self.cfg, fn,
+                         {k: v for k, v in caches.items() if k != "paged"})
+        per_page = pool_bytes // self.allocator.total_pages
+        return total - pool_bytes + self.allocator.used_pages * per_page
+
+    def slot_bytes(self, caches) -> int:
+        """Live decode-state bytes per slot (``live_bytes / max_slots``
+        — identical to the historical dense accounting when no compact
+        representation is active).
+
+        Args:
+          caches: stored slot cache.
+
+        Returns:
+          Bytes per slot (int).
+        """
+        return self.live_bytes(caches) // self.max_slots
+
+
+def make_state_store(cfg: ModelConfig, max_slots: int, n_max: int,
+                     dtype=jnp.bfloat16, mesh=None, rules=None,
+                     state_dtype: str = "dense",
+                     kv_page_size: Optional[int] = None,
+                     kv_pages: Optional[int] = None) -> SlotStateStore:
+    """Build the slot-state store for an engine's representation choice.
+
+    Validates the request against the backend's capability flags
+    (``AttentionBackend.state_dtypes`` / ``supports_paged_kv``) at
+    construction time — an unsupported representation is a config error,
+    not something to discover mid-decode.
+
+    Args:
+      cfg: model config (its attention backend gates what is allowed).
+      max_slots: slot count.
+      n_max: per-slot token capacity.
+      dtype: dense KV dtype (page pools inherit it).
+      mesh: optional serving mesh (shardings from
+        ``distributed.sharding.slot_cache_specs`` with the codec's
+        ``logical_specs`` transform applied).
+      rules: logical→physical axis rules.
+      state_dtype: "dense" or a quantised moment dtype ("int8"/"fp8").
+      kv_page_size: enable paged KV with this power-of-two page size
+        (≤ ``n_max``); mutually exclusive with quantisation.
+      kv_pages: pool size in pages (default ``max_slots × ⌈n_max /
+        page_size⌉`` — exhaustion-free; smaller pools oversubscribe and
+        may raise on ``ensure_tokens``).
+
+    Returns:
+      A ``SlotStateStore``.
+
+    Raises:
+      ValueError: representation unsupported by the backend, both
+        representations requested at once, or a bad page size.
+    """
+    backend = resolve_backend(cfg)
+    if state_dtype != "dense" and kv_page_size is not None:
+        raise ValueError(
+            "state_dtype quantisation and kv_page_size paging are mutually "
+            "exclusive (they compress different state kinds)"
+        )
+    canonical = jnp.dtype(dtype).name
+    codec: Optional[StateCodec] = None
+    allocator: Optional[PageAllocator] = None
+    if state_dtype != "dense":
+        if state_dtype not in backend.state_dtypes:
+            raise ValueError(
+                f"state_dtype={state_dtype!r} is not supported by the "
+                f"{backend.name!r} backend (supported: "
+                f"{backend.state_dtypes})"
+            )
+        codec = QuantizedCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
+                               dtype=canonical, qdtype=state_dtype)
+    elif kv_page_size is not None:
+        if backend.state_kind != "kv" or not backend.supports_paged_kv:
+            raise ValueError(
+                f"kv_page_size: the {backend.name!r} backend holds "
+                f"{backend.state_kind!r} state and does not support paged "
+                "KV (supports_paged_kv=False)"
+            )
+        if (kv_page_size <= 0 or kv_page_size & (kv_page_size - 1)
+                or kv_page_size > n_max):
+            raise ValueError(
+                f"kv_page_size={kv_page_size} must be a power of two "
+                f"<= n_max={n_max}"
+            )
+        pages_per_slot = -(-n_max // kv_page_size)
+        total = max_slots * pages_per_slot if kv_pages is None else int(kv_pages)
+        if total < pages_per_slot:
+            raise ValueError(
+                f"kv_pages={total} cannot back even one full slot "
+                f"({pages_per_slot} pages)"
+            )
+        codec = PagedKVCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
+                             dtype=canonical, page_size=int(kv_page_size),
+                             total_pages=total)
+        allocator = PageAllocator(max_slots, pages_per_slot, total,
+                                  int(kv_page_size), n_max)
+    return SlotStateStore(cfg, max_slots, n_max, dtype, mesh, rules,
+                          codec, allocator)

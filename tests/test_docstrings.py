@@ -22,6 +22,7 @@ MODULES = (
     "repro.serve.scheduler",
     "repro.serve.slots",
     "repro.serve.speculative",
+    "repro.serve.state_repr",
     "repro.backends",
     "repro.backends.base",
     "repro.backends.registry",
@@ -52,6 +53,10 @@ DOCUMENTED_SIGNATURES = {
     "repro.serve.faults": ("standard_trace",),
     "repro.serve.load": ("poisson_trace", "bursty_trace", "run_trace"),
     "repro.serve.speculative": ("register_proposer", "draft_available"),
+    "repro.serve.state_repr": ("make_state_store", "wrap_cache_fn"),
+    "repro.backends.state": (
+        "quantize_leaf", "dequantize_leaf", "gather_pages", "scatter_pages",
+    ),
     "repro.backends.registry": (
         "register_backend", "get_backend", "resolve_backend",
     ),
@@ -138,6 +143,41 @@ def test_engine_classes_documented():
         doc = inspect.getdoc(getattr(DraftProposer, meth)) or ""
         assert doc.strip(), f"DraftProposer.{meth} undocumented"
     assert (inspect.getdoc(Speculator.run_rounds) or "").strip()
+
+
+def test_state_repr_surface_documented():
+    """The state-representation layer is public serving surface: codecs,
+    the store, the allocator — classes, their public methods, and the
+    quantise/page primitives in backends/state.py."""
+    from repro.backends.state import (
+        PagedKVCache,
+        PagedMeta,
+        QuantizedLeaf,
+    )
+    from repro.serve.state_repr import (
+        DenseCodec,
+        PageAllocator,
+        PagedKVCodec,
+        QuantizedCodec,
+        SlotStateStore,
+        StateCodec,
+    )
+
+    for cls in (QuantizedLeaf, PagedKVCache, PagedMeta, StateCodec,
+                DenseCodec, QuantizedCodec, PagedKVCodec, PageAllocator,
+                SlotStateStore):
+        assert (inspect.getdoc(cls) or "").strip(), cls
+    for cls, meths in (
+        (SlotStateStore, ("write_slot", "read_slot", "read_dense",
+                          "clear_slot", "corrupt_slot", "health",
+                          "ensure_tokens", "init_caches", "live_bytes",
+                          "slot_bytes")),
+        (PageAllocator, ("ensure", "release", "reset")),
+        (StateCodec, ("decode", "encode", "init_stored", "logical_specs")),
+    ):
+        for meth in meths:
+            doc = inspect.getdoc(getattr(cls, meth)) or ""
+            assert doc.strip(), f"{cls.__name__}.{meth} undocumented"
 
 
 def test_backend_protocol_methods_documented():

@@ -1,0 +1,255 @@
+"""Paged softmax KV: allocator safety, token identity, live-bytes truth.
+
+Three layers of defence for the paged representation:
+
+* ``PageAllocator`` property tests — every page is on the free list or
+  in exactly one table row (cardinality invariant), allocation is a
+  per-slot prefix, exhaustion is a loud error, release/reset return
+  everything;
+* the same invariant checked after EVERY engine step of seeded
+  ``serve/load.py`` traces (admit / retire / preempt churn) and across
+  corruption→quarantine→re-prefill recovery — no page leaks, no
+  cross-slot aliasing, pool empty once the trace drains;
+* paged engines are a pure storage detail: token-identical to the dense
+  engine on random traces, while ``serve_slot_state_bytes`` reports
+  pages actually in use (and the dense number stays the historical
+  capacity accounting — the regression pin).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.models.lm import lm_init_caches
+from repro.serve import (
+    FaultPlan,
+    Request,
+    SchedulerPolicy,
+    ServeEngine,
+    SlotCorruption,
+    Status,
+    bursty_trace,
+    poisson_trace,
+    run_trace,
+    slot_bytes,
+)
+from repro.serve.state_repr import PageAllocator
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_reduced("smollm-135m").replace(attention="softmax")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("n_max", 64)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _check_allocator(alloc: PageAllocator):
+    """The free-list cardinality invariant + no cross-slot aliasing."""
+    assigned = alloc.table[alloc.table >= 0].tolist()
+    assert len(alloc.free) + len(assigned) == alloc.total_pages, \
+        "pages leaked or double-freed"
+    everywhere = list(alloc.free) + assigned
+    assert len(set(everywhere)) == len(everywhere), \
+        "page aliased (two owners or on free list while assigned)"
+    for row in alloc.table:
+        backed = row >= 0
+        assert not backed[np.argmin(backed):].any() or backed.all(), \
+            "page row not a prefix"
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator properties (pure host — no device work)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_prefix_growth_and_release():
+    alloc = PageAllocator(max_slots=3, pages_per_slot=4, total_pages=12,
+                          page_size=PAGE, n_max=32)
+    assert alloc.used_pages == 0
+    assert alloc.ensure(0, 13)            # ceil(13/8) = 2 pages
+    assert (alloc.table[0] >= 0).sum() == 2 and alloc.used_pages == 2
+    assert not alloc.ensure(0, 16)        # still 2 pages — no change
+    assert alloc.ensure(0, 17)            # 3 pages
+    assert alloc.ensure(0, 10_000)        # clamped to n_max -> 4 pages
+    assert (alloc.table[0] >= 0).sum() == 4
+    _check_allocator(alloc)
+    assert alloc.release(0) and alloc.used_pages == 0
+    assert not alloc.release(0)           # idempotent
+    _check_allocator(alloc)
+
+
+def test_allocator_random_churn_invariant():
+    """Seeded ensure/release storm: the invariant holds after every op
+    and a final release-all empties the pool exactly."""
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(max_slots=6, pages_per_slot=4, total_pages=24,
+                          page_size=PAGE, n_max=32)
+    for _ in range(500):
+        slot = int(rng.integers(0, 6))
+        if rng.random() < 0.6:
+            alloc.ensure(slot, int(rng.integers(1, 33)))
+        else:
+            alloc.release(slot)
+        _check_allocator(alloc)
+    for s in range(6):
+        alloc.release(s)
+    assert alloc.used_pages == 0 and sorted(alloc.free) == list(range(24))
+
+
+def test_allocator_exhaustion_is_loud():
+    """An oversubscribed pool fails with a RuntimeError naming the fix,
+    never by corrupting the table."""
+    alloc = PageAllocator(max_slots=2, pages_per_slot=4, total_pages=5,
+                          page_size=PAGE, n_max=32)
+    alloc.ensure(0, 32)
+    with pytest.raises(RuntimeError, match="kv_pages"):
+        alloc.ensure(1, 32)
+    _check_allocator(alloc)  # failed alloc must not leak partial state
+    alloc.release(0)
+    assert alloc.ensure(1, 32)  # freed pages are reusable
+
+
+def test_allocator_reset_restores_full_pool():
+    alloc = PageAllocator(max_slots=2, pages_per_slot=2, total_pages=4,
+                          page_size=PAGE, n_max=16)
+    alloc.ensure(0, 16)
+    alloc.ensure(1, 9)
+    alloc.reset()
+    assert alloc.used_pages == 0 and (alloc.table == -1).all()
+    assert sorted(alloc.free) == list(range(4))
+
+
+# ---------------------------------------------------------------------------
+# Engine churn: no leaks across admit/retire/preempt/quarantine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,seed", [("poisson", 0), ("bursty", 3)])
+def test_no_page_leaks_under_load(served, kind, seed):
+    """run_trace with preemption churn: the allocator invariant holds at
+    every engine step, and the pool drains to empty with the queue."""
+    cfg, params = served
+    make = poisson_trace if kind == "poisson" else bursty_trace
+    trace = make(seed, 10, cfg.vocab, prompt_len=(4, 20),
+                 new_tokens=(3, 10), priorities=(0, 5))
+    holder = {}
+
+    def factory(clock):
+        eng = _engine(cfg, params, clock=clock, kv_page_size=PAGE,
+                      sched=SchedulerPolicy(preemption=True,
+                                            priority_admission=True))
+        holder["eng"] = eng
+        return eng
+
+    def hook(eng):
+        _check_allocator(eng.state_store.allocator)
+
+    report = run_trace(factory, trace, "paged", step_hook=hook)
+    assert len(report.outcomes) == len(trace)
+    assert holder["eng"].state_store.allocator.used_pages == 0, \
+        "pages still allocated after the trace drained"
+
+
+def test_no_page_leaks_across_quarantine(served):
+    """Corruption → quarantine → re-prefill recovery returns the
+    quarantined slot's pages and never aliases the healthy slot's."""
+    cfg, params = served
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (9, 14)]
+    plan = FaultPlan(events=(SlotCorruption(at_block=1, slot=0,
+                                            mode="nan"),))
+    eng = _engine(cfg, params, kv_page_size=PAGE, fault_plan=plan)
+    rids = [eng.submit(Request(tokens=p, max_new_tokens=8))
+            for p in prompts]
+    while eng.step():
+        _check_allocator(eng.state_store.allocator)
+    results = eng.poll()
+    assert eng.stats()["quarantined"] == 1
+    for rid, p in zip(rids, prompts):
+        ref = _engine(cfg, params)
+        rref = ref.submit(Request(tokens=p, max_new_tokens=8))
+        np.testing.assert_array_equal(results[rid].tokens, ref.run()[rref])
+    assert eng.state_store.allocator.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Token identity vs dense + live-bytes accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,seed", [("poisson", 11), ("bursty", 5)])
+def test_paged_token_identical_to_dense(served, kind, seed):
+    """Every OK output of a paged engine == the dense engine's, token
+    for token, on a random trace (storage representation is invisible
+    to decode)."""
+    cfg, params = served
+    make = poisson_trace if kind == "poisson" else bursty_trace
+    trace = make(seed, 6, cfg.vocab, prompt_len=(4, 20), new_tokens=(3, 10))
+
+    def outputs(**kw):
+        eng = _engine(cfg, params, **kw)
+        rids = [eng.submit(it.request()) for it in trace.items]
+        results = eng.run(return_results=True)
+        assert all(results[r].status is Status.OK for r in rids)
+        return [results[r].tokens for r in rids]
+
+    for d, p in zip(outputs(), outputs(kv_page_size=PAGE)):
+        np.testing.assert_array_equal(d, p)
+
+
+def test_dense_slot_state_bytes_regression(served):
+    """The historical accounting is pinned: a dense engine's
+    ``serve_slot_state_bytes`` == ``slot_bytes(caches, max_slots)`` ==
+    the hand-computed capacity number."""
+    cfg, params = served
+    eng = _engine(cfg, params)
+    expect = slot_bytes(eng.caches, eng.max_slots)
+    assert eng.slot_state_bytes == expect
+    hand = sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(
+                   lm_init_caches(cfg, eng.max_slots, eng.n_max,
+                                  jnp.dtype(cfg.dtype)))) // eng.max_slots
+    assert eng.slot_state_bytes == hand
+    assert eng.live_state_bytes == expect * eng.max_slots
+
+
+def test_paged_bytes_report_pages_in_use(served):
+    """Paged ``serve_slot_state_bytes`` reports LIVE bytes: empty engine
+    ~0 KV, one short request = exactly its page count, drained = empty
+    again — never the pool's capacity."""
+    cfg, params = served
+    eng = _engine(cfg, params, kv_page_size=PAGE)
+    store = eng.state_store
+    pool_caches = {k: v for k, v in eng.caches.items() if k != "paged"}
+    capacity = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(pool_caches))
+    page_bytes = capacity  # dense-equivalent pool: capacity == all pages
+    per_page = page_bytes // store.allocator.total_pages
+
+    empty = eng.live_state_bytes
+    assert empty < capacity // 4  # no pages live -> only tables/lengths
+
+    eng.submit(Request(tokens=np.arange(9, dtype=np.int32) % cfg.vocab,
+                       max_new_tokens=16))
+    eng.step()
+    used = store.allocator.used_pages
+    assert used >= -(-9 // PAGE)
+    assert eng.live_state_bytes == empty + used * per_page
+    assert eng.slot_state_bytes == eng.live_state_bytes // eng.max_slots
+
+    eng.run()
+    assert store.allocator.used_pages == 0
+    assert eng.live_state_bytes == empty

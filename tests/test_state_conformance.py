@@ -1,0 +1,354 @@
+"""Cross-backend slot-state conformance suite.
+
+Every registered attention backend × every state representation it
+advertises (``AttentionBackend.state_dtypes`` plus ``"paged"`` when
+``supports_paged_kv``) must honour the slot-cache contract the serving
+layer is built on:
+
+* ``write_slot ∘ read_slot`` round-trips (bit-exact for lossless
+  representations; idempotent-after-one-quantisation for int8/fp8);
+* ``clear_slot`` touches ONLY the cleared slot — co-batched slots stay
+  bit-identical and the cleared slot reads as a fresh slot;
+* a ``read_slot`` snapshot survives preemption: restoring it into a
+  recycled slot is bit-exact and greedy decode continues token-identical
+  (the snapshot-handoff contract for lossy state, docs/serving.md
+  §Memory);
+* ``state_health`` accepts healthy prefilled state and flags a
+  corrupted slot without implicating its neighbours.
+
+The grid derives from the capability flags themselves, so a new backend
+or representation is conformance-tested the moment it registers.  The
+same grid runs on a 2x2 serve mesh in a subprocess (same pattern as
+tests/test_serve_sharded.py).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import available_backends
+from repro.configs import get_reduced
+from repro.models import lm_init
+from repro.models.lm import lm_decode_step, lm_prefill
+from repro.serve import make_state_store
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+N_MAX = 32
+SLOTS = 3
+PAGE = 8
+LENS = (7, 12, 9)  # per-slot prompt lengths (deliberately ≠ page multiples)
+
+# read-after-write tolerance vs the written state, as a fraction of each
+# leaf's amax: int8 rounds to 1/128 steps of a pow2 ≥ amax; fp8 e4m3
+# keeps a 3-bit mantissa.  Lossless representations must be bit-exact.
+_QTOL = {"int8": 0.02, "fp8": 0.1}
+
+
+def _representations(backend):
+    reps = list(backend.state_dtypes)
+    if backend.supports_paged_kv:
+        reps.append("paged")
+    return reps
+
+
+GRID = [
+    (name, rep)
+    for name, backend in sorted(available_backends().items())
+    for rep in _representations(backend)
+]
+
+
+def _arch_for(name: str) -> str:
+    # block-level backends fuse the whole layer — use their native arch;
+    # qkv-level backends all slot into the same reduced decoder.
+    if available_backends()[name].level == "block":
+        return "mamba2-780m"
+    return "qwen2-1.5b"
+
+
+@pytest.fixture(scope="module")
+def models():
+    """One reduced (cfg, params) per registered backend."""
+    out = {}
+    for name in sorted(available_backends()):
+        arch = _arch_for(name)
+        cfg = get_reduced(arch)
+        if available_backends()[name].level != "block":
+            cfg = cfg.replace(attention=name)
+        out[name] = (cfg, lm_init(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+def _make_store(cfg, rep, mesh=None, rules=None):
+    kwargs = {}
+    if rep in ("int8", "fp8"):
+        kwargs["state_dtype"] = rep
+    elif rep == "paged":
+        kwargs["kv_page_size"] = PAGE
+    return make_state_store(
+        cfg, SLOTS, N_MAX, jnp.dtype(cfg.dtype), mesh=mesh, rules=rules,
+        **kwargs,
+    )
+
+
+def _slot_states(cfg, params):
+    """Healthy batch-1 prefill caches, one per slot, distinct prompts."""
+    states = []
+    for j, n in enumerate(LENS):
+        rng = np.random.default_rng(100 + j)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, n)), jnp.int32)
+        _, caches = lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)
+        states.append(caches)
+    return states
+
+
+def _assert_trees_equal(a, b, err=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), err
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=err)
+
+
+def _assert_trees_close(a, b, frac):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+        atol = frac * max(float(np.abs(y).max()), 1e-6)
+        np.testing.assert_allclose(x, y, atol=atol)
+
+
+def _fill_store(store, states):
+    caches = store.init_caches()
+    for j, st in enumerate(states):
+        caches = store.ensure_tokens(caches, j, LENS[j])
+        caches = store.write_slot(caches, st, jnp.asarray(j, jnp.int32))
+    return caches
+
+
+@pytest.mark.parametrize("backend,rep", GRID)
+def test_write_read_round_trip(backend, rep, models):
+    """read_slot(write_slot(s)) == s — bit-exact for dense/paged; for
+    quantised state, within the dtype's step size AND idempotent (the
+    snapshot of a quantised slot re-encodes bit-exactly)."""
+    cfg, params = models[backend]
+    store = _make_store(cfg, rep)
+    states = _slot_states(cfg, params)
+    caches = _fill_store(store, states)
+    reads = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+             for j in range(SLOTS)]
+    if rep in ("int8", "fp8"):
+        for st, r in zip(states, reads):
+            _assert_trees_close(r, st, _QTOL[rep])
+        # one quantisation is lossy; a second round-trip must not move
+        for j, r in enumerate(reads):
+            caches = store.write_slot(caches, r, jnp.asarray(j, jnp.int32))
+        for j, r in enumerate(reads):
+            again = store.read_slot(caches, jnp.asarray(j, jnp.int32))
+            _assert_trees_equal(again, r, f"slot {j} not idempotent")
+    else:
+        for j, (st, r) in enumerate(zip(states, reads)):
+            _assert_trees_equal(r, st, f"slot {j} round-trip")
+
+
+@pytest.mark.parametrize("backend,rep", GRID)
+def test_clear_slot_isolation(backend, rep, models):
+    """clear_slot(1) leaves slots 0/2 bit-identical and slot 1 reading
+    as a freshly-initialised slot (the re-admission contract)."""
+    cfg, params = models[backend]
+    store = _make_store(cfg, rep)
+    caches = _fill_store(store, _slot_states(cfg, params))
+    before = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+              for j in range(SLOTS)]
+    caches = store.clear_slot(caches, jnp.asarray(1, jnp.int32))
+    for j in (0, 2):
+        _assert_trees_equal(
+            store.read_slot(caches, jnp.asarray(j, jnp.int32)), before[j],
+            f"clear_slot(1) disturbed slot {j}",
+        )
+    fresh = _make_store(cfg, rep)
+    _assert_trees_equal(
+        store.read_slot(caches, jnp.asarray(1, jnp.int32)),
+        fresh.read_slot(fresh.init_caches(), jnp.asarray(1, jnp.int32)),
+        "cleared slot != fresh slot",
+    )
+    assert bool(np.asarray(store.health(caches))[1]), "cleared slot unhealthy"
+    if store.paged:
+        assert store.allocator.table[1].max() < 0, "pages leaked on clear"
+
+
+@pytest.mark.parametrize("backend,rep", GRID)
+def test_snapshot_restore_token_identity(backend, rep, models):
+    """Preemption handoff: snapshot a mid-decode slot, recycle the slot
+    for another request, restore the snapshot — the restored slot is
+    bit-exact vs the snapshot and greedy decode continues with identical
+    tokens.  For lossless representations the continuation also matches
+    the never-preempted run."""
+    cfg, params = models[backend]
+    store = _make_store(cfg, rep)
+    states = _slot_states(cfg, params)
+    caches = store.init_caches()
+
+    # victim: prefill + 4 decode steps of real greedy state
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
+    logits, run = lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = 10
+    for i in range(4):
+        logits, run = lm_decode_step(params, tok, run, jnp.asarray(pos + i), cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos += 4
+
+    caches = store.ensure_tokens(caches, 0, pos)
+    caches = store.write_slot(caches, run, jnp.asarray(0, jnp.int32))
+    snap = store.read_slot(caches, jnp.asarray(0, jnp.int32))  # preempt
+    caches = store.clear_slot(caches, jnp.asarray(0, jnp.int32))
+    caches = store.ensure_tokens(caches, 0, LENS[1])  # slot recycled
+    caches = store.write_slot(caches, states[1], jnp.asarray(0, jnp.int32))
+    caches = store.clear_slot(caches, jnp.asarray(0, jnp.int32))
+    caches = store.ensure_tokens(caches, 0, pos)  # resume
+    caches = store.write_slot(caches, snap, jnp.asarray(0, jnp.int32))
+    restored = store.read_slot(caches, jnp.asarray(0, jnp.int32))
+    _assert_trees_equal(restored, snap, "restore not bit-exact")
+
+    def continue_from(state, t0):
+        out, t, s = [], t0, state
+        for i in range(4):
+            lg, s = lm_decode_step(params, t, s, jnp.asarray(pos + i), cfg)
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            out.append(int(t[0]))
+        return out
+
+    assert continue_from(restored, tok) == continue_from(snap, tok)
+    if rep in ("dense", "paged"):
+        assert continue_from(snap, tok) == continue_from(run, tok), \
+            "lossless representation changed the decode trajectory"
+
+
+@pytest.mark.parametrize("backend,rep", GRID)
+def test_health_accepts_healthy_flags_corrupted(backend, rep, models):
+    """state_health is representation-blind: healthy prefilled slots
+    pass; a NaN- or Inf-poisoned slot is flagged alone."""
+    cfg, params = models[backend]
+    store = _make_store(cfg, rep)
+    caches = _fill_store(store, _slot_states(cfg, params))
+    assert np.asarray(store.health(caches)).all(), "healthy state flagged"
+    caches = store.corrupt_slot(
+        caches, jnp.asarray(2, jnp.int32), jnp.asarray(np.nan, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(store.health(caches)), [True, True, False])
+    caches = store.corrupt_slot(
+        caches, jnp.asarray(0, jnp.int32), jnp.asarray(np.inf, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(store.health(caches)), [False, True, False])
+
+
+# ---------------------------------------------------------------------------
+# The same grid on a 2x2 serve mesh (subprocess with 8 fake CPU devices)
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess(code: str) -> str:
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": str(_REPO / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(_REPO),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_conformance_grid_on_2x2_mesh():
+    """write/read round-trip, clear isolation and health for EVERY
+    (backend, representation) pair on a dp=2 × tp=2 mesh — quantised
+    scales and page tables replicate, payloads shard."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.backends import available_backends
+        from repro.configs import get_reduced
+        from repro import distributed as dist
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import lm_init
+        from repro.models.lm import lm_prefill
+        from repro.serve import make_state_store
+
+        N_MAX, SLOTS, PAGE, LENS = 32, 2, 8, (7, 12)
+        mesh = make_serve_mesh(2, 2)
+        rules = dist.rules_for_mesh(mesh)
+        for name, backend in sorted(available_backends().items()):
+            arch = ("mamba2-780m" if backend.level == "block"
+                    else "qwen2-1.5b")
+            cfg = get_reduced(arch)
+            if backend.level != "block":
+                cfg = cfg.replace(attention=name)
+            params = lm_init(jax.random.PRNGKey(0), cfg)
+            reps = list(backend.state_dtypes)
+            if backend.supports_paged_kv:
+                reps.append("paged")
+            states = []
+            for j, n in enumerate(LENS):
+                rng = np.random.default_rng(100 + j)
+                toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, n)),
+                                   jnp.int32)
+                states.append(
+                    lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)[1])
+            for rep in reps:
+                kw = ({"state_dtype": rep} if rep in ("int8", "fp8") else
+                      {"kv_page_size": PAGE} if rep == "paged" else {})
+                store = make_state_store(cfg, SLOTS, N_MAX,
+                                         jnp.dtype(cfg.dtype), mesh=mesh,
+                                         rules=rules, **kw)
+                caches = store.init_caches()
+                for j, st in enumerate(states):
+                    caches = store.ensure_tokens(caches, j, LENS[j])
+                    caches = store.write_slot(caches, st,
+                                              jnp.asarray(j, jnp.int32))
+                reads = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+                         for j in range(SLOTS)]
+                if rep in ("int8", "fp8"):
+                    for j, r in enumerate(reads):
+                        caches = store.write_slot(caches, r,
+                                                  jnp.asarray(j, jnp.int32))
+                        again = store.read_slot(caches,
+                                                jnp.asarray(j, jnp.int32))
+                        for x, y in zip(jax.tree_util.tree_leaves(again),
+                                        jax.tree_util.tree_leaves(r)):
+                            np.testing.assert_array_equal(np.asarray(x),
+                                                          np.asarray(y))
+                else:
+                    for st, r in zip(states, reads):
+                        for x, y in zip(jax.tree_util.tree_leaves(r),
+                                        jax.tree_util.tree_leaves(st)):
+                            np.testing.assert_array_equal(np.asarray(x),
+                                                          np.asarray(y))
+                before = store.read_slot(caches, jnp.asarray(0, jnp.int32))
+                caches = store.clear_slot(caches, jnp.asarray(1, jnp.int32))
+                for x, y in zip(
+                        jax.tree_util.tree_leaves(
+                            store.read_slot(caches, jnp.asarray(0, jnp.int32))),
+                        jax.tree_util.tree_leaves(before)):
+                    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+                assert np.asarray(store.health(caches)).all()
+                caches = store.corrupt_slot(
+                    caches, jnp.asarray(0, jnp.int32),
+                    jnp.asarray(np.nan, jnp.float32))
+                np.testing.assert_array_equal(
+                    np.asarray(store.health(caches)), [False, True])
+                print("OK", name, rep)
+    """)
+    done = {tuple(line.split()[1:]) for line in out.splitlines()
+            if line.startswith("OK")}
+    expected = {(name, rep) for name, backend in available_backends().items()
+                for rep in (list(backend.state_dtypes)
+                            + (["paged"] if backend.supports_paged_kv else []))}
+    assert done == expected, f"missing combos: {expected - done}"
