@@ -3,7 +3,16 @@
 Trains the same small LM with four attention backends on the associative-
 recall (copy) corpus and on the Markov (bigram) corpus.  Copy requires
 content-based addressing: softmax should win, taylor-2 should approach it,
-order-1/elu linear should trail — the paper's motivating hypothesis."""
+order-1/elu linear should trail — the paper's motivating hypothesis.
+
+A fifth variant is the Based-style hybrid schedule (taylor default +
+``softmax_window`` at one pattern position, equal parameter count): the
+bench machine-asserts it closes at least half of the pure-taylor →
+softmax quality gap on the copy corpus while keeping LINEAR decode cost —
+its per-slot state is byte-identical at n_max and 2·n_max (O(1) moments +
+O(window) KV ring; full softmax doubles), and decode stays one fused
+dispatch per token across the mixed backends.
+"""
 
 from __future__ import annotations
 
@@ -14,10 +23,15 @@ from benchmarks.common import emit
 from repro.configs import get_reduced
 from repro.core.feature_map import TaylorConfig
 from repro.data import make_task
+from repro.models import lm_init
+from repro.models.lm import lm_decode_step, lm_prefill, lm_state_bytes
 from repro.optim import adamw, cosine_warmup
 from repro.train import make_train_step, train_state_init
 
 STEPS = 300
+N_MAX = 1024          # serving horizon for the bytes/slot comparison
+DECODE_TOKENS = 8
+MIN_GAP_CLOSURE = 0.5
 
 
 def _final_loss(cfg, task, seed=0):
@@ -32,23 +46,86 @@ def _final_loss(cfg, task, seed=0):
     return last
 
 
+def _dispatches_per_token(cfg, n_max=64):
+    """Greedy-decode DECODE_TOKENS tokens and count jitted step calls:
+    a hybrid schedule must cost ONE fused lm_decode_step per token, not
+    one dispatch per backend."""
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.zeros((1, 4), jnp.int32)
+    logits, caches = lm_prefill(params, {"tokens": prompt}, cfg, n_max=n_max)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dispatches = 0
+    for i in range(DECODE_TOKENS):
+        logits, caches = lm_decode_step(
+            params, tok, caches, jnp.asarray(4 + i), cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        dispatches += 1
+    return dispatches / DECODE_TOKENS
+
+
 def run():
     rows = []
     base = get_reduced("smollm-135m").replace(n_groups=2)
+    # equal-parameter two-layer layout for the hybrid (schedule addresses
+    # pattern positions, so the window layer needs its own position)
+    hyb = base.replace(
+        pattern=("attn", "attn"), n_groups=1, attention="taylor",
+        taylor=TaylorConfig(order=2),
+        attention_schedule={1: "softmax_window"}, attn_window=32,
+    )
     variants = {
         "softmax": base.replace(attention="softmax"),
         "taylor2": base.replace(attention="taylor", taylor=TaylorConfig(order=2)),
         "taylor1": base.replace(attention="taylor", taylor=TaylorConfig(order=1)),
         "linear_elu": base.replace(attention="linear_elu"),
+        "hybrid": hyb,
     }
+    losses = {}
     for corpus in ("copy", "bigram"):
         task = make_task(corpus, base.vocab, 64, 8, seed=7)
+        losses[corpus] = {}
         for name, cfg in variants.items():
             loss = _final_loss(cfg, task)
+            losses[corpus][name] = loss
             rows.append(emit(f"quality_{corpus}_{name}", 0.0,
                              f"final_loss_{STEPS}steps={loss:.4f}"))
+
+    # --- hybrid summary: gap closure at linear decode cost -----------------
+    gap = losses["copy"]["taylor2"] - losses["copy"]["softmax"]
+    closed = losses["copy"]["taylor2"] - losses["copy"]["hybrid"]
+    closure = closed / gap if gap > 1e-3 else float("inf")
+    assert closure >= MIN_GAP_CLOSURE, (
+        f"hybrid closes {closure:.2f} of the taylor→softmax copy gap "
+        f"(need >= {MIN_GAP_CLOSURE})")
+
+    # linear decode cost: hybrid state is byte-identical at n_max and
+    # 2*n_max (bounded); full softmax KV doubles with the horizon.
+    hyb_bytes = lm_state_bytes(hyb, 1, N_MAX)
+    hyb_bytes_2x = lm_state_bytes(hyb, 1, 2 * N_MAX)
+    sm_bytes = lm_state_bytes(variants["softmax"], 1, N_MAX)
+    sm_bytes_2x = lm_state_bytes(variants["softmax"], 1, 2 * N_MAX)
+    assert hyb_bytes == hyb_bytes_2x, "hybrid state not bounded in n_max"
+    assert sm_bytes_2x > sm_bytes, "softmax KV should grow with n_max"
+    dpt = _dispatches_per_token(hyb)
+    assert dpt == 1.0, f"hybrid decode took {dpt} dispatches/token"
+    rows.append(emit(
+        "quality_hybrid_summary", 0.0,
+        f"gap_copy={gap:.4f};gap_closure={closure:.2f}"
+        f";min_required={MIN_GAP_CLOSURE}"
+        f";dispatches_per_token={dpt:.2f}"
+        f";bytes_per_slot_hybrid={hyb_bytes}"
+        f";bytes_per_slot_softmax={sm_bytes}"
+        f";state_bounded=True"))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import json
+    import pathlib
+
+    from benchmarks.run import _parse_rows
+
+    out_rows = run()
+    out = pathlib.Path(__file__).parent / "BENCH_quality.json"
+    out.write_text(json.dumps(_parse_rows(out_rows), indent=2) + "\n")
+    print(f"# wrote {out}")

@@ -15,7 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_memory       — state representations: bytes/slot, live KV, error
 
 Additionally writes ``BENCH_attention.json``, ``BENCH_kernel.json``,
-``BENCH_serve.json``, ``BENCH_serve_sharded.json``,
+``BENCH_quality.json``, ``BENCH_serve.json``, ``BENCH_serve_sharded.json``,
 ``BENCH_resilience.json``, ``BENCH_load.json``, ``BENCH_speculative.json``
 and ``BENCH_memory.json`` (name ->
 {us_per_call, derived}) next to this file so the backend, kernel and
@@ -61,7 +61,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
-    json_rows = {"bench_attention": {}, "bench_kernel": {}, "bench_serve": {},
+    json_rows = {"bench_attention": {}, "bench_kernel": {},
+                 "bench_quality": {}, "bench_serve": {},
                  "bench_serve_sharded": {}, "bench_resilience": {},
                  "bench_load": {}, "bench_speculative": {},
                  "bench_memory": {}}
@@ -80,6 +81,7 @@ def main() -> None:
             print(f"{name}_FAILED,0.0,{type(e).__name__}:{e}")
     for name, out_name in (("bench_attention", "BENCH_attention.json"),
                            ("bench_kernel", "BENCH_kernel.json"),
+                           ("bench_quality", "BENCH_quality.json"),
                            ("bench_serve", "BENCH_serve.json"),
                            ("bench_serve_sharded", "BENCH_serve_sharded.json"),
                            ("bench_resilience", "BENCH_resilience.json"),

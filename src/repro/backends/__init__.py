@@ -7,13 +7,20 @@ algorithm in the repo; ``ModelConfig.attention`` resolves through
 engine ("auto" | "xla" | "pallas").  See ``backends/base.py`` for the
 protocol and DESIGN.md §Backend registry for the selection rules.
 
-The four built-ins are registered at import time:
+The five built-ins are registered at import time:
 
-  * ``softmax``    — exact baseline (dense + flash), KV-cache decode.
-  * ``taylor``     — the paper's order-2 Taylor linear attention
+  * ``softmax``        — exact baseline (dense + flash), KV-cache decode.
+  * ``softmax_window``  — sliding-window softmax, O(window) KV ring
+    (the hybrid-schedule partner for Based-style models).
+  * ``taylor``         — the paper's order-2 Taylor linear attention
     (XLA chunked scan + the Pallas forward/backward kernel pair).
-  * ``linear_elu`` — Katharopoulos elu+1 baseline.
-  * ``ssm``        — Mamba2/SSD recurrent state (block-level).
+  * ``linear_elu``     — Katharopoulos elu+1 baseline.
+  * ``ssm``            — Mamba2/SSD recurrent state (block-level).
+
+Per-layer hybrids: ``ModelConfig.attention_schedule`` overrides the
+backend at individual pattern positions; each block resolves through
+``resolve_backend(cfg.layer_cfg(name))`` so every protocol method sees a
+uniform per-layer view.
 """
 
 from repro.backends.base import AttentionBackend
@@ -25,11 +32,13 @@ from repro.backends.registry import (
     resolve_backend,
 )
 from repro.backends.softmax import SoftmaxBackend
+from repro.backends.softmax_window import SoftmaxWindowBackend
 from repro.backends.ssm import SSMBackend
 from repro.backends.state import AttnCache, CrossCache, KVCache
 from repro.backends.taylor import TaylorBackend
 
 register_backend(SoftmaxBackend())
+register_backend(SoftmaxWindowBackend())
 register_backend(TaylorBackend())
 register_backend(LinearEluBackend())
 register_backend(SSMBackend())
@@ -42,6 +51,7 @@ __all__ = [
     "LinearEluBackend",
     "SSMBackend",
     "SoftmaxBackend",
+    "SoftmaxWindowBackend",
     "TaylorBackend",
     "available_backends",
     "get_backend",

@@ -38,6 +38,14 @@ config validation) never need backend-specific ``if`` chains:
   * ``supports_paged_kv`` — the backend's ``state_kind="kv"`` slot cache
     may be held paged (pow2 pages + per-slot page table) by the serve
     layer (``serve/state_repr.py``).
+  * ``bounded_state``  — decode state is O(1)/O(window) in context length
+    (gates ``ModelConfig.supports_long_context`` per layer).
+
+Models need not be single-backend: ``ModelConfig.attention_schedule``
+assigns a registered backend per pattern position, and the model / serve
+layers resolve a backend PER RUN (``config.schedule_runs``) — mixed
+``state_kind`` caches coexist in one slot store (docs/serving.md
+§Hybrid schedules).
 """
 
 from __future__ import annotations
@@ -72,6 +80,16 @@ class AttentionBackend:
     # ``ServeEngine(state_dtype=..., kv_page_size=...)`` accepts.
     state_dtypes: Tuple[str, ...] = ("dense",)
     supports_paged_kv: bool = False
+
+    @property
+    def bounded_state(self) -> bool:
+        """True when decode state is O(1) in context length.
+
+        The per-layer gate behind ``ModelConfig.supports_long_context``:
+        moment/SSM states are constant-size, a full KV cache is O(n).
+        Backends with a bounded KV ring (``softmax_window``: O(window))
+        override this to True despite ``state_kind == "kv"``."""
+        return self.state_kind != "kv"
 
     # -- config validation / impl selection ---------------------------------
 

@@ -1,0 +1,156 @@
+"""Sliding-window exact-softmax backend with an O(window) ring-buffer KV.
+
+The hybrid-schedule partner of the Taylor backend (Based-style models:
+``attention="taylor"`` + ``attention_schedule`` placing ``softmax_window``
+at a few pattern positions — docs/serving.md §Hybrid schedules).  Each
+query attends exactly to the last ``cfg.attn_window`` tokens (inclusive),
+so quality-critical recall spans get exact attention while decode state
+stays bounded: the KV ring holds ``min(attn_window, n_max)`` entries per
+kv head regardless of context length, which keeps
+``ModelConfig.supports_long_context`` true (``bounded_state=True``).
+
+Ring semantics: token at absolute position ``p`` writes slot ``p % W``.
+``KVCache.length`` holds the TOTAL tokens seen (unclamped, unlike the
+full-softmax backend) — the valid-slot mask ``arange(W) < length`` is
+correct in both the warm-up (< W tokens, prefix of the ring valid) and
+wrapped (all W slots valid) phases, and softmax is permutation-invariant
+over slots since RoPE is applied to k/v at their ABSOLUTE positions
+before they enter the backend.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import AttentionBackend
+from repro.backends.state import KVCache
+from repro.core import softmax_decode_step
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _window_of(cfg, n_max: int) -> int:
+    """Ring capacity: the window, clamped to the cache's token budget (a
+    ring larger than ``n_max`` can never wrap)."""
+    return min(cfg.attn_window, n_max)
+
+
+def window_attention(q: Array, k: Array, v: Array, window: int,
+                     scale=None) -> Array:
+    """Banded-causal softmax: query ``i`` attends to ``j`` with
+    ``i - window < j <= i``.
+
+    Args:
+      q: ``[b, h, n, d]`` queries.
+      k: ``[b, hk, n, d]`` keys (GQA: ``h % hk == 0``).
+      v: ``[b, hk, n, dv]`` values.
+      window: band width in tokens (inclusive of the query's own position).
+      scale: logit scale (default ``1/sqrt(d)``).
+
+    Returns:
+      ``[b, h, n, dv]`` attention output.
+    """
+    b, h, n, d = q.shape
+    h_kv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, h_kv, h // h_kv, n, d)
+    s = jnp.einsum(
+        "bkgid,bkjd->bkgij", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    iq = jnp.arange(n)[:, None]
+    jk = jnp.arange(n)[None, :]
+    band = (jk <= iq) & (jk > iq - window)
+    s = jnp.where(band, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bkjv->bkgiv", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(b, h, n, v.shape[-1]).astype(v.dtype)
+
+
+def _ring_from_sequence(k: Array, v: Array, w: int) -> KVCache:
+    """Build the post-prefill ring: slot ``s`` holds the LAST token whose
+    absolute position is ``≡ s (mod w)`` — exactly the cache ``n`` calls
+    of the decode step's ``pos % w`` write would have produced."""
+    b, hk, n, hd = k.shape
+    s = jnp.arange(w)
+    p = jnp.mod(s - n, w) + n - w  # last pos written to slot s (< 0: never)
+    valid = (p >= 0)[None, None, :, None]
+    idx = jnp.clip(p, 0, n - 1)
+    ring_k = jnp.where(valid, jnp.take(k, idx, axis=2), jnp.zeros((), k.dtype))
+    ring_v = jnp.where(valid, jnp.take(v, idx, axis=2), jnp.zeros((), v.dtype))
+    return KVCache(
+        k=ring_k, v=ring_v, length=jnp.full((b,), n, jnp.int32)
+    )
+
+
+class SoftmaxWindowBackend(AttentionBackend):
+    """Sliding-window softmax: banded-causal apply, O(window) KV ring
+    decode.  ``length`` counts TOTAL tokens seen (may exceed the ring
+    capacity); the read mask and the ``pos % W`` write both derive from
+    it, so prefill→decode handoff and chunked prefill are exact."""
+
+    name = "softmax_window"
+    state_kind = "kv"
+    supports_cross = False  # a window over a global source is ill-defined
+    supports_cp = False
+    impls = ("xla",)
+    # The ring is already O(window); paging would re-introduce per-token
+    # page churn for a fixed-size buffer, so the serve layer keeps it dense.
+    supports_paged_kv = False
+
+    @property
+    def bounded_state(self) -> bool:
+        """True — the ring holds at most ``attn_window`` tokens."""
+        return True
+
+    def init_cache(self, cfg, batch, n_max, dtype):
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        w = _window_of(cfg, n_max)
+        z = jnp.zeros((batch, hk, w, hd), dtype)
+        return KVCache(k=z, v=z, length=jnp.zeros((batch,), jnp.int32))
+
+    def apply(self, q, k, v, cfg, *, causal=True):
+        if not causal:
+            raise ValueError(
+                "softmax_window is causal-only (non-causal windowed "
+                "attention is ill-defined); use the softmax backend for "
+                "encoder blocks"
+            )
+        return window_attention(q, k, v, cfg.attn_window)
+
+    def prefill(self, q, k, v, cfg, n_max):
+        out = self.apply(q, k, v, cfg, causal=True)
+        w = _window_of(cfg, n_max)
+        return out, _ring_from_sequence(k, v, w)
+
+    def decode_step(self, cache, q, k, v, cfg, pos):
+        w = cache.k.shape[2]
+        idx = jnp.mod(pos, w)
+        upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_index_in_dim(c, u, i, 1))
+        new_k = upd(cache.k, k.astype(cache.k.dtype), idx)
+        new_v = upd(cache.v, v.astype(cache.v.dtype), idx)
+        cache = KVCache(k=new_k, v=new_v, length=pos + 1)
+        o = softmax_decode_step(q, cache.k, cache.v, cache.length)
+        return o, cache
+
+    def state_health(self, cache, cfg):
+        """Ring health: finite K/V and a non-negative token count.
+
+        Unlike the full-KV backend there is NO upper bound on ``length``
+        — it counts total tokens seen, which legitimately exceeds the
+        ring capacity once the window wraps.
+
+        Args:
+          cache: ``KVCache`` ring (``k/v [b, hk, W, ·]``, ``length [b]``).
+          cfg: model config.
+
+        Returns:
+          ``[b]`` bool — True where the row's ring is usable.
+        """
+        from repro.backends.state import tree_slot_health  # noqa: PLC0415
+
+        return tree_slot_health(cache) & (cache.length >= 0)

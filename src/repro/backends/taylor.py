@@ -55,6 +55,7 @@ def _pallas_fits(cfg) -> bool:
     return (
         not t.minus_one
         and not t.sym_state
+        and t.decay == 1.0
         and cfg.resolved_head_dim <= _PALLAS_MAX_HEAD_DIM
         and cfg.attn_sharding != "cp"
         and not AttentionBackend._uses_cross(cfg)
@@ -76,9 +77,28 @@ class TaylorBackend(AttentionBackend):
 
     def validate(self, cfg):
         super().validate(cfg)
+        t = cfg.taylor
+        if t.decay != 1.0:
+            if cfg.attn_sharding == "cp":
+                raise ValueError(
+                    "taylor decay is incompatible with context parallelism: "
+                    "shard-state merge is addition, which a decayed state "
+                    "violates (shard b must discount shard a by γ^len)"
+                )
+            if self._uses_cross(cfg):
+                raise ValueError(
+                    "taylor decay is causal-self-attention only, but the "
+                    "model has cross/encoder blocks (a position-decayed "
+                    "global source state is ill-defined)"
+                )
+            if cfg.attn_impl == "pallas":
+                raise ValueError(
+                    "attn_impl='pallas': the Pallas kernels implement the "
+                    "undecayed recurrence; decay != 1.0 needs "
+                    "attn_impl='xla' (or 'auto')"
+                )
         if cfg.attn_impl != "pallas":
             return
-        t = cfg.taylor
         if t.minus_one:
             raise ValueError(
                 "attn_impl='pallas': the Pallas kernels hardcode the "
@@ -132,8 +152,12 @@ class TaylorBackend(AttentionBackend):
         Returns:
           ``cfg`` with ``taylor.order = 1`` (``attn_impl`` forced to
           "xla": decode/prefill drive the XLA moment paths), or ``None``.
+          Also ``None`` for hybrid schedules — the order hierarchy only
+          applies to the taylor layers, and a draft that degrades some
+          layers but not others has no cheaper-state story (serve falls
+          back to the n-gram proposer).
         """
-        if cfg.taylor.order < 2:
+        if cfg.taylor.order < 2 or cfg.attention_schedule:
             return None
         return cfg.replace(
             taylor=dataclasses.replace(cfg.taylor, order=1), attn_impl="xla"

@@ -43,6 +43,16 @@ class TaylorConfig:
         (d(d+1)/2 instead of d² — exact, from the multinomial expansion).
         Halves decode-state memory; the training path keeps the full form
         (its custom VJP contractions are d-tiled instead).
+      decay: gated moment-state decay (RNN-perspective of softmax attention,
+        PAPERS.md arxiv 2507.23632).  Token j's contribution to the state
+        read at position i is weighted ``γ_h^(i-j)`` with per-kv-head rates
+        ``γ_h = decay^((h+1)/h_kv)`` (a geometric spread from a single
+        scalar, à la ALiBi slopes; see ``decay_gammas``).  ``1.0`` (default)
+        is bit-identical to the undecayed paper recurrence — every decay
+        branch is guarded at the python level.  Decayed configs are
+        causal-self-attention only: the Pallas kernel, context parallelism
+        (state merge is no longer addition) and cross attention all reject
+        ``decay != 1.0`` at validate time.
     """
 
     order: int = 2
@@ -50,12 +60,15 @@ class TaylorConfig:
     normalize_qk: bool = True
     minus_one: bool = False
     sym_state: bool = False
+    decay: float = 1.0
 
     def __post_init__(self):
         if self.order not in (1, 2):
             raise ValueError(f"Taylor order must be 1 or 2, got {self.order}")
         if self.alpha <= 0:
             raise ValueError(f"alpha must be positive, got {self.alpha}")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
 
     def scale(self, d: int) -> float:
         """The logit scale a = 1 / (alpha * sqrt(d))."""

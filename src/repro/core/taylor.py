@@ -126,6 +126,25 @@ def _safe_div(num: Array, den: Array, eps: float = 1e-6) -> Array:
     return num / den[..., None]
 
 
+def decay_gammas(h_kv: int, decay: float) -> Array:
+    """Per-kv-head decay rates from the single ``TaylorConfig.decay`` scalar.
+
+    Geometric spread ``γ_h = decay^((h+1)/h_kv)`` for ``h = 0..h_kv-1``
+    (ALiBi-slope style): the last head decays at exactly ``decay``, earlier
+    heads progressively slower, so one scalar yields a bank of effective
+    context lengths.  With ``h_kv == 1`` this is just ``[decay]``.
+
+    Args:
+      h_kv: number of kv heads.
+      decay: the config scalar in (0, 1].
+
+    Returns:
+      ``[h_kv]`` f32 array of per-head rates.
+    """
+    h = jnp.arange(1, h_kv + 1, dtype=jnp.float32)
+    return jnp.asarray(decay, jnp.float32) ** (h / h_kv)
+
+
 # ---------------------------------------------------------------------------
 # Parallel (quadratic) reference mode.
 # ---------------------------------------------------------------------------
@@ -147,6 +166,18 @@ def taylor_attention_parallel(
     if causal:
         mask = jnp.tril(jnp.ones((n, n), dtype=bool))
         p = jnp.where(mask, p, 0.0)
+    if cfg.decay != 1.0:
+        if not causal:
+            raise ValueError("taylor decay is causal-self-attention only")
+        g_h = decay_gammas(h_kv, cfg.decay)  # [hk]
+        delta = (
+            jnp.arange(n, dtype=jnp.float32)[:, None]
+            - jnp.arange(n, dtype=jnp.float32)[None, :]
+        )
+        # clamp j>i to 0 — those entries are already masked, and γ^(i-j)
+        # would overflow there for small γ
+        w = g_h[:, None, None] ** jnp.maximum(delta, 0.0)  # [hk, n, n]
+        p = p * w[None, :, None]
     num = jnp.einsum("bkgij,bkjv->bkgiv", p, v, preferred_element_type=jnp.float32)
     den = jnp.sum(p, axis=-1)
     return _ungroup(_safe_div(num, den)).astype(v.dtype)
@@ -222,23 +253,44 @@ def _state_update(state: TaylorState, kc: Array, vc: Array, cfg: TaylorConfig) -
     """Accumulate one chunk of keys/values into the moment state.
 
     kc: [b, k, c, d], vc: [b, k, c, v].
+
+    With ``cfg.decay != 1.0`` the prefix sums become decayed sums: the old
+    state is carried with ``γ^c`` and token j (local, 0-based) enters with
+    weight ``γ^(c-1-j)``, so the result is always the state *as of the last
+    absorbed token*.  Each weight is applied exactly ONCE per moment
+    (folded into v for s0/s1/s2, into k for z1, into the k⊗k product for
+    z2).  The ``decay == 1.0`` branch is the original code path untouched —
+    bit-identical by construction.
     """
     f32 = jnp.float32
     kc32 = kc.astype(f32)
     vc32 = vc.astype(f32)
-    n0 = state.n0 + kc.shape[2]
-    s0 = state.s0 + jnp.sum(vc32, axis=2)
-    z1 = state.z1 + jnp.sum(kc32, axis=2)
-    s1 = state.s1 + jnp.einsum("bkcd,bkcv->bkdv", kc32, vc32)
+    c = kc.shape[2]
+    if cfg.decay != 1.0:
+        g_h = decay_gammas(kc.shape[1], cfg.decay)  # [hk]
+        w = g_h[:, None] ** jnp.arange(c - 1, -1, -1, dtype=f32)[None, :]  # [hk,c]
+        carry = (g_h**c)[None, :]  # [1, hk]
+        vw = vc32 * w[None, :, :, None]
+        kw = kc32 * w[None, :, :, None]
+        tok = jnp.sum(w, axis=1)[None, :]
+        old = lambda x, nd: x * carry.reshape(carry.shape + (1,) * nd)
+    else:
+        vw, kw, tok = vc32, kc32, c
+        old = lambda x, nd: x
+    n0 = old(state.n0, 0) + tok
+    s0 = old(state.s0, 1) + jnp.sum(vw, axis=2)
+    z1 = old(state.z1, 1) + jnp.sum(kw, axis=2)
+    s1 = old(state.s1, 2) + jnp.einsum("bkcd,bkcv->bkdv", kc32, vw)
     z2, s2 = state.z2, state.s2
     if cfg.order >= 2 and cfg.sym_state:
         from repro.core.feature_map import symvec  # noqa: PLC0415
 
         phi2 = symvec(kc32)  # [b,k,c,D2]
-        z2 = state.z2 + jnp.sum(phi2, axis=2)
-        s2 = state.s2 + jnp.einsum("bkcf,bkcv->bkfv", phi2, vc32)
+        phi2w = phi2 if cfg.decay == 1.0 else phi2 * w[None, :, :, None]
+        z2 = old(state.z2, 1) + jnp.sum(phi2w, axis=2)
+        s2 = old(state.s2, 2) + jnp.einsum("bkcf,bkcv->bkfv", phi2, vw)
     elif cfg.order >= 2:
-        z2 = state.z2 + jnp.einsum("bkcd,bkce->bkde", kc32, kc32)
+        z2 = old(state.z2, 2) + jnp.einsum("bkcd,bkce->bkde", kw, kc32)
         # d-tiled: a direct 3-operand einsum materialises [b,k,c,d,e]
         # (13 GB for a 1600-token cross-attention source at d=128)
         b, hk, c, d = kc.shape
@@ -249,11 +301,11 @@ def _state_update(state: TaylorState, kc: Array, vc: Array, cfg: TaylorConfig) -
                 b, hk, c, t * d
             )
             parts.append(
-                jnp.einsum("bkcf,bkcv->bkfv", kk, vc32).reshape(
+                jnp.einsum("bkcf,bkcv->bkfv", kk, vw).reshape(
                     b, hk, t, d, vc.shape[-1]
                 )
             )
-        s2 = state.s2 + jnp.concatenate(parts, axis=2)
+        s2 = old(state.s2, 3) + jnp.concatenate(parts, axis=2)
     return TaylorState(n0=n0, s0=s0, z1=z1, s1=s1, z2=z2, s2=s2)
 
 
@@ -290,9 +342,15 @@ def taylor_attention_chunked(
     qg = _group(q, h_kv)  # [b, hk, g, n, d]
     g = qg.shape[2]
 
-    if initial_state is None and not return_state and not cfg.sym_state:
+    if (
+        initial_state is None
+        and not return_state
+        and not cfg.sym_state
+        and cfg.decay == 1.0
+    ):
         # (the custom VJP's tiled backward is written for the full second
-        # moment; sym_state is a decode/serving optimisation)
+        # moment; sym_state is a decode/serving optimisation and decayed
+        # states fall back to scan autodiff)
         from repro.core.taylor_vjp import taylor_chunked_core  # noqa: PLC0415
 
         out = taylor_chunked_core(qg, k, v, cfg, chunk)
@@ -331,6 +389,17 @@ def chunked_num_den(qs, ks, vs, cfg: TaylorConfig, state0: TaylorState):
     d = qs.shape[-1]
     a = cfg.scale(d)
     mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    f32 = jnp.float32
+    if cfg.decay != 1.0:
+        # intra-chunk pair weight γ^(i-j); inter-chunk scale γ^(i+1) lifts
+        # the carried state (as-of the previous chunk's LAST token) to each
+        # local query position i.
+        g_h = decay_gammas(qs.shape[2], cfg.decay)  # [hk]
+        delta = (
+            jnp.arange(chunk, dtype=f32)[:, None] - jnp.arange(chunk, dtype=f32)[None, :]
+        )
+        w_intra = g_h[:, None, None] ** jnp.maximum(delta, 0.0)  # [hk, c, c]
+        w_inter = g_h[:, None] ** jnp.arange(1, chunk + 1, dtype=f32)[None, :]  # [hk, c]
 
     def step(state, xs):
         qc, kc, vc = xs
@@ -338,9 +407,14 @@ def chunked_num_den(qs, ks, vs, cfg: TaylorConfig, state0: TaylorState):
             "bkgid,bkjd->bkgij", qc, kc, preferred_element_type=jnp.float32
         ) * a
         p = jnp.where(mask, poly_scores(s, cfg), 0.0)
+        if cfg.decay != 1.0:
+            p = p * w_intra[None, :, None]
         num = jnp.einsum("bkgij,bkjv->bkgiv", p, vc, preferred_element_type=jnp.float32)
         den = jnp.sum(p, axis=-1)
         inum, iden = _chunk_inter(qc, state, cfg, a)
+        if cfg.decay != 1.0:
+            inum = inum * w_inter[None, :, None, :, None]
+            iden = iden * w_inter[None, :, None, :]
         new_state = _state_update(state, kc, vc, cfg)
         return new_state, (num + inum, den + iden)
 
@@ -367,6 +441,11 @@ def taylor_attention_noncausal(
     b, h, nq, d = q.shape
     h_kv = k.shape[1]
     d_v = v.shape[-1]
+    if cfg.decay != 1.0:
+        raise ValueError(
+            "taylor decay is causal-self-attention only (a position-decayed "
+            "global source state is ill-defined)"
+        )
     q, k = _norm_qk(q, k, cfg)
     a = cfg.scale(d)
     qg = _group(q, h_kv)  # [b, hk, g, nq, d]
@@ -507,7 +586,10 @@ def taylor_state_read(state: TaylorState, q_t: Array, cfg: TaylorConfig) -> Arra
 
 
 def merge_states(a: TaylorState, b: TaylorState) -> TaylorState:
-    """States are prefix sums ⇒ merging two consecutive shards is addition."""
+    """States are prefix sums ⇒ merging two consecutive shards is addition.
+
+    Valid for ``decay == 1.0`` only (a decayed merge would need shard b's
+    token count to discount shard a); the backend rejects CP + decay."""
     add = lambda x, y: None if x is None else x + y
     return TaylorState(*(add(x, y) for x, y in zip(a, b)))
 

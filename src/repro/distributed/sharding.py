@@ -258,7 +258,8 @@ def slot_cache_specs(
 
     from repro.backends import get_backend, resolve_backend  # noqa: PLC0415
     from repro.backends.state import CrossCache  # noqa: PLC0415
-    from repro.models.lm import _runs, lm_init_caches  # noqa: PLC0415
+    from repro.models.config import schedule_runs  # noqa: PLC0415
+    from repro.models.lm import lm_init_caches  # noqa: PLC0415
 
     dtype = jnp.dtype(dtype or cfg.dtype)
     if state is not None and state.name != "dense":
@@ -268,15 +269,18 @@ def slot_cache_specs(
         cache_shapes = jax.eval_shape(
             lambda: lm_init_caches(cfg, max_slots, n_max, dtype)
         )
-    backend = resolve_backend(cfg)
+    tail_cfg = cfg.layer_cfg(cfg.attention)
 
-    def one(kind: str):
+    def one(kind: str, rcfg: Any):
+        # each run's layout comes from ITS backend's cache_pspec — under a
+        # hybrid schedule one model mixes moment and KV-ring run specs.
         if kind == "mamba":
-            return get_backend("ssm").cache_pspec(cfg)
-        self_spec = backend.cache_pspec(cfg)
+            return get_backend("ssm").cache_pspec(rcfg)
+        backend = resolve_backend(rcfg)
+        self_spec = backend.cache_pspec(rcfg)
         if kind != "cross":
             return self_spec
-        return (self_spec, CrossCache(kv=backend.cross_cache_pspec(cfg)))
+        return (self_spec, CrossCache(kv=backend.cross_cache_pspec(rcfg)))
 
     is_p = lambda x: isinstance(x, P)
 
@@ -288,11 +292,14 @@ def slot_cache_specs(
 
     logical = {
         "group": (
-            tuple(stack(one(kind)) for kind, _ in _runs(cfg.pattern))
+            tuple(
+                stack(one(kind, cfg.layer_cfg(bk)))
+                for kind, bk, _ in schedule_runs(cfg)
+            )
             if cfg.n_groups
             else ()
         ),
-        "tail": tuple(one(k) for k in cfg.tail),
+        "tail": tuple(one(k, tail_cfg) for k in cfg.tail),
         "kv_src": (
             P("dp", None, None) if cfg.family in ("vlm", "encdec") else None
         ),

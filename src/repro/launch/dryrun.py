@@ -45,7 +45,12 @@ from repro.distributed.sharding import (
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm_init
 from repro.models.config import ModelConfig, count_active_params, count_params
-from repro.models.lm import lm_decode_step, lm_init_caches, lm_prefill
+from repro.models.lm import (
+    lm_decode_step,
+    lm_init_caches,
+    lm_prefill,
+    lm_state_bytes,
+)
 from repro.optim import adafactor, adamw, cosine_warmup
 from repro.train.step import TrainState, make_train_step
 
@@ -198,6 +203,10 @@ def lower_cell(arch: str, shape: str, mesh, backend=None, donate=True, save_hlo=
         )
         args = (pshapes, tok, cshapes, pos)
         model_flops = 2.0 * n_active * spec.batch
+        # per-slot persistent state, summed per layer — a hybrid schedule mixes
+        # O(1) moment blocks with O(window) KV rings so no single-backend
+        # formula is valid here.
+        decode_state_bytes = lm_state_bytes(cfg, b, spec.seq, dt)
     else:
         raise ValueError(spec.kind)
 
@@ -253,7 +262,8 @@ def lower_cell(arch: str, shape: str, mesh, backend=None, donate=True, save_hlo=
     record = {
         "arch": arch,
         "shape": shape,
-        "backend": cfg.attention if not cfg.is_attention_free else "ssm",
+        # per-layer description under a hybrid schedule ("taylor+softmax_window")
+        "backend": cfg.backend_desc if not cfg.is_attention_free else "ssm",
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "n_chips": n_chips,
         "n_params": n_params,
@@ -266,6 +276,8 @@ def lower_cell(arch: str, shape: str, mesh, backend=None, donate=True, save_hlo=
         "lower_s": t_lower,
         "compile_s": t_compile,
     }
+    if spec.kind == "decode":
+        record["decode_state_bytes"] = decode_state_bytes
     if save_hlo:
         record["hlo_path"] = _save_hlo(arch, shape, record["mesh"], hlo)
     return record, compiled

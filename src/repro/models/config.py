@@ -93,6 +93,22 @@ class ModelConfig:
     #       exchange only the O(d²·d_v) moment state (taylor backend only;
     #       the state-sum property is unique to linear attention).
     attn_sharding: str = "tp"
+    # --- per-layer attention schedule (hybrid models) ---
+    # Maps PATTERN BLOCK POSITIONS (indices into ``pattern``; the pattern
+    # repeats identically in every group, so a position addresses the same
+    # layer slot of all n_groups) to registered backend names.  Positions
+    # absent from the schedule use ``attention``; ``tail`` and encoder
+    # blocks always use ``attention``.  Accepts a dict at construction;
+    # normalised to a sorted tuple of (position, name) pairs with
+    # default-name entries dropped, so configs stay hashable and two
+    # spellings of the same schedule compare equal.  Validated against the
+    # backend registry at config time (Based-style hybrids: taylor default
+    # + ``softmax_window`` at selected positions — see docs/serving.md
+    # §Hybrid schedules).
+    attention_schedule: Tuple[Tuple[int, str], ...] = ()
+    # Sliding-window size (tokens) for the ``softmax_window`` backend's
+    # O(window) ring-buffer KV cache.
+    attn_window: int = 128
 
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
@@ -120,6 +136,50 @@ class ModelConfig:
             raise ValueError(
                 f"attn_impl must be auto|xla|pallas, got {self.attn_impl!r}"
             )
+        if self.attn_window < 1:
+            raise ValueError(f"attn_window must be >= 1, got {self.attn_window}")
+        sched = self.attention_schedule
+        if isinstance(sched, dict):
+            sched = tuple(sched.items())
+        norm = {}
+        for pos, name in sched:
+            pos = int(pos)
+            if not 0 <= pos < len(self.pattern):
+                raise ValueError(
+                    f"attention_schedule position {pos} outside pattern "
+                    f"(len {len(self.pattern)})"
+                )
+            if self.pattern[pos] == "mamba":
+                raise ValueError(
+                    f"attention_schedule position {pos} is a 'mamba' block — "
+                    "only attention-bearing blocks take a backend"
+                )
+            if pos in norm and norm[pos] != name:
+                raise ValueError(
+                    f"attention_schedule position {pos} mapped twice "
+                    f"({norm[pos]!r} and {name!r})"
+                )
+            norm[pos] = name
+        if norm:
+            from repro.backends.registry import get_backend  # noqa: PLC0415 (cycle)
+
+            for pos, name in norm.items():
+                backend = get_backend(name)  # raises on unknown names
+                if backend.level != "qkv":
+                    raise ValueError(
+                        f"attention_schedule position {pos}: backend {name!r} "
+                        f"is {backend.level}-level, not a qkv attention backend"
+                    )
+                if self.pattern[pos] == "cross" and not backend.supports_cross:
+                    raise ValueError(
+                        f"attention_schedule position {pos} is a 'cross' "
+                        f"block but backend {name!r} has supports_cross=False"
+                    )
+        object.__setattr__(
+            self,
+            "attention_schedule",
+            tuple(sorted((p, n) for p, n in norm.items() if n != self.attention)),
+        )
 
     @property
     def resolved_head_dim(self) -> int:
@@ -139,17 +199,108 @@ class ModelConfig:
         return kinds <= {"mamba"}
 
     @property
+    def pattern_backends(self) -> Tuple[str, ...]:
+        """Backend name per pattern position (the per-layer view).
+
+        Positions in ``attention_schedule`` get their scheduled name;
+        everything else (including ``mamba`` positions, where the name is
+        never consulted) gets the uniform ``attention`` default."""
+        sched = dict(self.attention_schedule)
+        return tuple(
+            sched.get(i, self.attention) for i in range(len(self.pattern))
+        )
+
+    def layer_cfg(self, backend: str) -> "ModelConfig":
+        """Config view for one layer run: ``attention`` replaced by that
+        run's backend, schedule cleared.  Everything below the model layer
+        (``models/attention.py``, the backends, the kernels) receives this
+        uniform view, so ``resolve_backend(cfg)`` call sites stay single-
+        backend.  Returns ``self`` when already uniform on ``backend``."""
+        if backend == self.attention and not self.attention_schedule:
+            return self
+        return dataclasses.replace(
+            self, attention=backend, attention_schedule=()
+        )
+
+    @property
+    def attention_backend_names(self) -> Tuple[str, ...]:
+        """Sorted unique backend names actually used by attention-bearing
+        blocks (pattern positions that are not ``mamba``, plus the tail /
+        encoder default) — the set per-layer capability checks range over."""
+        names = {
+            b
+            for b, kind in zip(self.pattern_backends, self.pattern)
+            if kind != "mamba"
+        }
+        if any(k != "mamba" for k in self.tail + self.encoder_pattern):
+            names.add(self.attention)
+        return tuple(sorted(names))
+
+    @property
+    def backend_desc(self) -> str:
+        """Human-readable backend description — the uniform backend name,
+        or the "+"-joined per-layer set under a hybrid schedule (error
+        strings, dryrun records, bench labels)."""
+        names = self.attention_backend_names or (self.attention,)
+        return "+".join(names)
+
+    @property
+    def uses_kv_cache(self) -> bool:
+        """True if ANY attention layer keeps an O(n)-or-ring KV cache
+        (per-layer ``state_kind == "kv"`` — the slot store must carry KV
+        nodes for those runs)."""
+        if self.is_attention_free:
+            return False
+        from repro.backends.registry import get_backend  # noqa: PLC0415 (cycle)
+
+        return any(
+            get_backend(n).state_kind == "kv"
+            for n in self.attention_backend_names
+        )
+
+    @property
     def supports_long_context(self) -> bool:
         """True if decode cost/state is O(1) in context length — i.e. no
-        block keeps an O(n) KV cache (registry ``state_kind`` != "kv")."""
+        layer's backend keeps an unbounded O(n) KV cache.  Per-layer under
+        ``attention_schedule``: every scheduled backend must have bounded
+        decode state (``bounded_state`` — moments, ssm, or an O(window)
+        ring like ``softmax_window``)."""
         if self.is_attention_free:
             return True
         from repro.backends.registry import get_backend  # noqa: PLC0415 (cycle)
 
-        return get_backend(self.attention).state_kind != "kv"
+        return all(
+            get_backend(n).bounded_state
+            for n in self.attention_backend_names
+        )
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+
+def schedule_runs(cfg: ModelConfig) -> Tuple[Tuple[str, str, int], ...]:
+    """Collapse the decoder ``pattern`` into runs of equal (kind, backend).
+
+    The per-layer analogue of ``models.lm._runs``: a run's blocks execute
+    under one inner ``lax.scan`` whose body is traced ONCE, so blocks in a
+    run must share an attention backend — ``attention_schedule`` entries
+    split runs exactly where the backend changes.  With an empty schedule
+    this degenerates to ``_runs(cfg.pattern)`` (identical run boundaries,
+    hence identical stacked-param ``r{j}`` keys and cache pytrees).
+
+    ``mamba`` positions report ``cfg.attention`` (never consulted, never a
+    split point on its own).
+
+    Returns:
+      Tuple of ``(kind, backend_name, run_len)``.
+    """
+    out = []
+    for kind, bk in zip(cfg.pattern, cfg.pattern_backends):
+        if out and out[-1][0] == kind and out[-1][1] == bk:
+            out[-1] = (kind, bk, out[-1][2] + 1)
+        else:
+            out.append((kind, bk, 1))
+    return tuple(out)
 
 
 def count_params(cfg: ModelConfig) -> int:

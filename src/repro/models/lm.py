@@ -25,7 +25,7 @@ from repro.models.blocks import (
     block_prefill,
     block_prefill_chunk,
 )
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, schedule_runs
 from repro.models.layers import (
     dense_init,
     sinusoidal_pos,
@@ -62,17 +62,32 @@ def _runs(kinds):
     return tuple(out)
 
 
-def _stack_init(key, kinds, n_groups: int, cfg: ModelConfig, dtype):
+def _cfg_runs(cfg: ModelConfig, kinds=None):
+    """Runs of ``(kind, run_cfg, run_len)``.
+
+    A run's scan body is traced ONCE, so every block in a run must share an
+    attention backend; ``attention_schedule`` entries split the decoder
+    pattern's runs where the backend changes (``config.schedule_runs``) and
+    each run carries its uniform ``layer_cfg`` view.  Pass ``kinds`` for
+    patterns the schedule does not apply to (encoder, tail)."""
+    if kinds is not None:
+        return tuple((k, cfg, rl) for k, rl in _runs(kinds))
+    return tuple(
+        (k, cfg.layer_cfg(bk), rl) for k, bk, rl in schedule_runs(cfg)
+    )
+
+
+def _stack_init(key, runs, n_groups: int, dtype):
     """Init one stacked param set per pattern RUN: leaves [n_groups, run_len, ...]."""
     out = {}
-    for j, (kind, rl) in enumerate(_runs(kinds)):
+    for j, (kind, rcfg, rl) in enumerate(runs):
         if kind == "shared_attn":
             continue  # shared weights live outside the stack
         keys = jax.random.split(jax.random.fold_in(key, j), n_groups * rl).reshape(
             n_groups, rl, 2
         )
         out[f"r{j}"] = jax.vmap(
-            jax.vmap(lambda k: block_init(k, kind, cfg, dtype))
+            jax.vmap(lambda k: block_init(k, kind, rcfg, dtype))
         )(keys)
     return out
 
@@ -83,7 +98,7 @@ def lm_init(key, cfg: ModelConfig, dtype=None):
     params: Dict[str, Any] = {
         "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
         "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
-        "blocks": {"group": _stack_init(ks[1], cfg.pattern, cfg.n_groups, cfg, dtype)},
+        "blocks": {"group": _stack_init(ks[1], _cfg_runs(cfg), cfg.n_groups, dtype)},
     }
     if cfg.tail:
         params["blocks"]["tail"] = {
@@ -101,7 +116,9 @@ def lm_init(key, cfg: ModelConfig, dtype=None):
         params["vision_proj"] = dense_init(ks[6], (cfg.vision_dim, cfg.d_model), dtype=dtype)
     if cfg.family == "encdec":
         params["encoder"] = {
-            "group": _stack_init(ks[7], cfg.encoder_pattern, cfg.n_encoder_groups, cfg, dtype),
+            "group": _stack_init(
+                ks[7], _cfg_runs(cfg, cfg.encoder_pattern), cfg.n_encoder_groups, dtype
+            ),
             "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
         }
         if cfg.pos == "learned":
@@ -128,7 +145,7 @@ def _remat(fn, cfg: ModelConfig):
 
 def _stack_apply(
     blocks,
-    kinds,
+    runs,
     x: Array,
     cfg: ModelConfig,
     positions: Optional[Array],
@@ -137,23 +154,27 @@ def _stack_apply(
 ) -> Tuple[Array, Array]:
     shared = blocks.get("shared")
     group = blocks["group"]
-    runs = _runs(kinds)
 
     # Remat at BLOCK granularity; blocks of one run execute under an inner
     # lax.scan, so backward recomputation is strictly one block at a time.
-    def one_block(p, x, kind):
-        x, a = block_apply(p, kind, x, cfg, positions, kv_src, causal)
+    # One fn per (kind, backend): each run applies its own layer_cfg view.
+    def one_block(p, x, kind, rcfg):
+        x, a = block_apply(p, kind, x, rcfg, positions, kv_src, causal)
         return constrain(x, "dp", "sp", None), a
 
+    tail_cfg = cfg.layer_cfg(cfg.attention)
+    fn_cfgs = {(kind, rcfg.attention): rcfg for kind, rcfg, _ in runs}
+    for kind in cfg.tail:
+        fn_cfgs.setdefault((kind, cfg.attention), tail_cfg)
     block_fns = {
-        kind: _remat(functools.partial(one_block, kind=kind), cfg)
-        for kind in set(kinds) | set(cfg.tail)
+        key: _remat(functools.partial(one_block, kind=key[0], rcfg=rcfg), cfg)
+        for key, rcfg in fn_cfgs.items()
     }
 
-    def run_scan(kind, rl, x, aux, run_params):
+    def run_scan(kind, bk, rl, x, aux, run_params):
         def body(carry, p):
             x, aux = carry
-            x, a = block_fns[kind](shared if kind == "shared_attn" else p, x)
+            x, a = block_fns[(kind, bk)](shared if kind == "shared_attn" else p, x)
             return (x, aux + a), None
 
         xs = None if kind == "shared_attn" else run_params
@@ -162,9 +183,9 @@ def _stack_apply(
 
     def group_body(carry, group_params):
         x, aux = carry
-        for j, (kind, rl) in enumerate(runs):
+        for j, (kind, rcfg, rl) in enumerate(runs):
             rp = None if kind == "shared_attn" else group_params[f"r{j}"]
-            x, aux = run_scan(kind, rl, x, aux, rp)
+            x, aux = run_scan(kind, rcfg.attention, rl, x, aux, rp)
         return (x, aux), None
 
     aux0 = jnp.zeros((), jnp.float32)
@@ -174,7 +195,7 @@ def _stack_apply(
         aux = aux0
     for i, kind in enumerate(cfg.tail):
         p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
-        x, a = block_fns[kind](p, x)
+        x, a = block_fns[(kind, cfg.attention)](p, x)
         aux = aux + a
     return x, aux
 
@@ -205,7 +226,9 @@ def _encode(params, frames: Array, cfg: ModelConfig) -> Array:
     else:
         pe = sinusoidal_pos(jnp.arange(frames.shape[1]), cfg.d_model).astype(dtype)
     x = frames.astype(dtype) + pe[None]
-    x, _ = _stack_apply(enc, cfg.encoder_pattern, x, cfg, None, None, causal=False)
+    x, _ = _stack_apply(
+        enc, _cfg_runs(cfg, cfg.encoder_pattern), x, cfg, None, None, causal=False
+    )
     return norm_apply(enc["final_norm"], x, cfg.norm, cfg.norm_eps)
 
 
@@ -235,7 +258,7 @@ def lm_apply(
     kv_src = _kv_source(params, batch, cfg)
     positions = jnp.arange(tokens.shape[1])
     x, aux = _stack_apply(
-        params["blocks"], cfg.pattern, x, cfg, positions, kv_src, causal=True
+        params["blocks"], _cfg_runs(cfg), x, cfg, positions, kv_src, causal=True
     )
     return _logits(params, x, cfg), aux
 
@@ -260,15 +283,15 @@ def lm_prefill(
     blocks = params["blocks"]
     shared = blocks.get("shared")
 
-    runs = _runs(cfg.pattern)
+    runs = _cfg_runs(cfg)
 
     def group_body(x, group_params):
         caches = []
-        for j, (kind, rl) in enumerate(runs):
-            def run_body(x, p):
+        for j, (kind, rcfg, rl) in enumerate(runs):
+            def run_body(x, p, kind=kind, rcfg=rcfg):
                 x, c = block_prefill(
                     shared if kind == "shared_attn" else p,
-                    kind, x, cfg, n_max, positions, kv_src,
+                    kind, x, rcfg, n_max, positions, kv_src,
                 )
                 return x, c
 
@@ -282,9 +305,10 @@ def lm_prefill(
     else:
         group_caches = ()
     tail_caches = []
+    tail_cfg = cfg.layer_cfg(cfg.attention)
     for i, kind in enumerate(cfg.tail):
         p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
-        x, c = block_prefill(p, kind, x, cfg, n_max, positions, kv_src)
+        x, c = block_prefill(p, kind, x, tail_cfg, n_max, positions, kv_src)
         tail_caches.append(c)
     logits = _logits(params, x[:, -1:, :], cfg)[:, 0, :]
     caches = {"group": group_caches, "tail": tuple(tail_caches), "kv_src": kv_src}
@@ -346,17 +370,17 @@ def _chunk_hidden(params, tokens, caches, pos0, cfg: ModelConfig):
         ).astype(dtype)
     blocks = params["blocks"]
     shared = blocks.get("shared")
-    runs = _runs(cfg.pattern)
+    runs = _cfg_runs(cfg)
 
     def group_body(x, xs):
         group_params, group_caches = xs
         new_caches = []
-        for j, (kind, rl) in enumerate(runs):
-            def run_body(x, step_xs):
+        for j, (kind, rcfg, rl) in enumerate(runs):
+            def run_body(x, step_xs, kind=kind, rcfg=rcfg):
                 p, cch = step_xs
                 return block_prefill_chunk(
                     shared if kind == "shared_attn" else p,
-                    kind, x, cch, cfg, positions,
+                    kind, x, cch, rcfg, positions,
                 )
 
             rp = None if kind == "shared_attn" else group_params[f"r{j}"]
@@ -373,9 +397,12 @@ def _chunk_hidden(params, tokens, caches, pos0, cfg: ModelConfig):
     else:
         group_caches = ()
     tail_caches = []
+    tail_cfg = cfg.layer_cfg(cfg.attention)
     for i, kind in enumerate(cfg.tail):
         p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
-        x, cch = block_prefill_chunk(p, kind, x, caches["tail"][i], cfg, positions)
+        x, cch = block_prefill_chunk(
+            p, kind, x, caches["tail"][i], tail_cfg, positions
+        )
         tail_caches.append(cch)
     new = {"group": group_caches, "tail": tuple(tail_caches),
            "kv_src": caches.get("kv_src")}
@@ -433,16 +460,16 @@ def lm_decode_step(
     shared = blocks.get("shared")
     kv_src = caches.get("kv_src")
 
-    runs = _runs(cfg.pattern)
+    runs = _cfg_runs(cfg)
 
     def group_body(x_t, xs):
         group_params, group_caches = xs
         new_caches = []
-        for j, (kind, rl) in enumerate(runs):
-            def run_body(x_t, step_xs):
+        for j, (kind, rcfg, rl) in enumerate(runs):
+            def run_body(x_t, step_xs, kind=kind, rcfg=rcfg):
                 p, c = step_xs
                 x_t, c = block_decode(
-                    shared if kind == "shared_attn" else p, kind, x_t, c, cfg, pos
+                    shared if kind == "shared_attn" else p, kind, x_t, c, rcfg, pos
                 )
                 return x_t, c
 
@@ -460,9 +487,10 @@ def lm_decode_step(
     else:
         group_caches = ()
     tail_caches = []
+    tail_cfg = cfg.layer_cfg(cfg.attention)
     for i, kind in enumerate(cfg.tail):
         p = shared if kind == "shared_attn" else blocks["tail"][f"t{i}"]
-        x_t, c = block_decode(p, kind, x_t, caches["tail"][i], cfg, pos)
+        x_t, c = block_decode(p, kind, x_t, caches["tail"][i], tail_cfg, pos)
         tail_caches.append(c)
     logits = _logits(params, x_t[:, None, :], cfg)[:, 0, :]
     new = {"group": group_caches, "tail": tuple(tail_caches), "kv_src": kv_src}
@@ -479,20 +507,21 @@ def lm_init_caches(
 ):
     """Zero-initialised decode caches with the exact pytree structure that
     lm_prefill produces (group caches stacked over n_groups).  Cache kinds
-    resolve through the backend registry (``state_kind`` decides KV vs
-    moment vs SSM leaves)."""
+    resolve through the backend registry PER RUN (each run's backend via
+    ``attention_schedule``; ``state_kind`` decides KV vs moment vs SSM
+    leaves — a hybrid schedule yields a heterogeneous pytree with mixed
+    node types across runs)."""
     from repro.backends import CrossCache, get_backend, resolve_backend  # noqa: PLC0415
 
-    backend = resolve_backend(cfg)
-
-    def one(kind):
+    def one(kind, rcfg):
         if kind == "mamba":
-            return get_backend("ssm").init_cache(cfg, batch, n_max, dtype)
-        self_cache = backend.init_cache(cfg, batch, n_max, dtype)
+            return get_backend("ssm").init_cache(rcfg, batch, n_max, dtype)
+        backend = resolve_backend(rcfg)
+        self_cache = backend.init_cache(rcfg, batch, n_max, dtype)
         if kind != "cross":
             return self_cache
         n_src = cfg.n_image_tokens if cfg.family == "vlm" else cfg.n_audio_ctx
-        cc = CrossCache(kv=backend.init_cross_cache(cfg, batch, n_src, dtype))
+        cc = CrossCache(kv=backend.init_cross_cache(rcfg, batch, n_src, dtype))
         return (self_cache, cc)
 
     def stack(tree, rl):
@@ -504,14 +533,42 @@ def lm_init_caches(
         )
 
     group = (
-        tuple(stack(one(kind), rl) for kind, rl in _runs(cfg.pattern))
+        tuple(stack(one(kind, rcfg), rl) for kind, rcfg, rl in _cfg_runs(cfg))
         if cfg.n_groups
         else ()
     )
-    tail = tuple(one(k) for k in cfg.tail)
+    tail_cfg = cfg.layer_cfg(cfg.attention)
+    tail = tuple(one(k, tail_cfg) for k in cfg.tail)
     kv_src = None
     if cfg.family == "vlm":
         kv_src = jnp.zeros((batch, cfg.n_image_tokens, cfg.d_model), dtype)
     elif cfg.family == "encdec":
         kv_src = jnp.zeros((batch, cfg.n_audio_ctx, cfg.d_model), dtype)
     return {"group": group, "tail": tail, "kv_src": kv_src}
+
+
+def lm_state_bytes(cfg: ModelConfig, batch: int, n_max: int,
+                   dtype=jnp.bfloat16) -> int:
+    """Decode-state bytes of the full cache pytree, summed PER LAYER.
+
+    Shape-only (``jax.eval_shape`` — no allocation), so it prices
+    arbitrary configs.  Under a hybrid ``attention_schedule`` each run
+    contributes its own backend's state (taylor moments O(1), softmax KV
+    O(n_max), a softmax_window ring O(window)), which is what the dryrun
+    memory model and the serve admission maths must sum — a single-backend
+    estimate is wrong in either direction for hybrids.
+
+    Args:
+      cfg: model config.
+      batch: batch rows (slots for serving estimates).
+      n_max: per-slot token capacity for KV-kind layers.
+      dtype: cache dtype.
+
+    Returns:
+      Total cache bytes (int).
+    """
+    shapes = jax.eval_shape(lambda: lm_init_caches(cfg, batch, n_max, dtype))
+    return sum(
+        int(x.size) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(shapes)
+    )

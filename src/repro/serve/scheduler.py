@@ -499,7 +499,7 @@ class ServeEngine:
             if not spec_mod.draft_available(cfg, self.sched.speculative_draft):
                 raise ValueError(
                     f"draft {self.sched.speculative_draft!r} is not "
-                    f"available on the {cfg.attention!r} backend (no "
+                    f"available on the {cfg.backend_desc!r} backend (no "
                     f"draft_config)"
                 )
         self.fault_plan = fault_plan
@@ -765,7 +765,7 @@ class ServeEngine:
             if not spec_mod.draft_available(self.cfg, request.draft):
                 raise RequestRejected(
                     f"draft {request.draft!r} is not available on the "
-                    f"{self.cfg.attention!r} backend (no draft_config)",
+                    f"{self.cfg.backend_desc!r} backend (no draft_config)",
                     reason="draft_unavailable",
                 )
 

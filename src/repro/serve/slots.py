@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.backends import get_backend, resolve_backend
-from repro.models.config import ModelConfig
-from repro.models.lm import _runs, lm_init_caches
+from repro.models.config import ModelConfig, schedule_runs
+from repro.models.lm import lm_init_caches
 
 Array = jax.Array
 
@@ -72,8 +72,10 @@ def init_slot_caches(
     """
     # Fail fast at engine construction: an unservable backend/impl combo
     # (e.g. a forced Pallas impl outside its envelope) is a config error,
-    # not something to discover mid-decode inside a jit.
-    resolve_backend(cfg)
+    # not something to discover mid-decode inside a jit.  Under a hybrid
+    # schedule every per-layer backend must validate, not just the default.
+    for name in cfg.attention_backend_names or (cfg.attention,):
+        resolve_backend(cfg.layer_cfg(name))
     if mesh is None:
         return lm_init_caches(cfg, max_slots, n_max, dtype)
     ns = slot_cache_shardings(cfg, max_slots, n_max, mesh, rules, dtype)
@@ -129,6 +131,12 @@ def slot_state_kinds(cfg: ModelConfig) -> Dict[str, str]:
     O(1) in context length — the serving-economics split DESIGN.md
     §Serving budgets against.
 
+    Under a hybrid ``attention_schedule`` a block kind can map to several
+    state kinds at once (taylor moments at some pattern positions, a KV
+    ring at others); those are joined with "+" in first-appearance pattern
+    order, e.g. ``{"attn": "moments+kv"}`` — uniform configs keep the
+    single-name values existing callers pin.
+
     Args:
       cfg: model config.
 
@@ -136,11 +144,21 @@ def slot_state_kinds(cfg: ModelConfig) -> Dict[str, str]:
       ``{block_kind: state_kind}`` for every kind in the model's pattern
       (+ tail), e.g. ``{"attn": "moments", "mamba": "ssm"}``.
     """
-    backend = resolve_backend(cfg)
+    resolve_backend(cfg)  # fail fast on unservable default backend/impl
     ssm_kind = get_backend("ssm").state_kind
-    out = {}
-    for kind in dict.fromkeys(cfg.pattern + cfg.tail):
-        out[kind] = ssm_kind if kind == "mamba" else backend.state_kind
+    out: Dict[str, str] = {}
+
+    def add(kind, state_kind):
+        kinds = out.get(kind, "").split("+") if kind in out else []
+        if state_kind not in kinds:
+            kinds.append(state_kind)
+        out[kind] = "+".join(kinds)
+
+    for kind, bk in zip(cfg.pattern, cfg.pattern_backends):
+        add(kind, ssm_kind if kind == "mamba" else get_backend(bk).state_kind)
+    for kind in cfg.tail:
+        add(kind, ssm_kind if kind == "mamba"
+            else get_backend(cfg.attention).state_kind)
     return out
 
 
@@ -315,24 +333,26 @@ def slot_health(caches, cfg: ModelConfig) -> Array:
       is healthy; a False slot must be quarantined before its next token
       is trusted.
     """
-    backend = resolve_backend(cfg)
     ssm = get_backend("ssm")
+    tail_cfg = cfg.layer_cfg(cfg.attention)
 
-    def one(kind, cache):
+    def one(kind, rcfg, cache):
+        backend = resolve_backend(rcfg)
         if kind == "mamba":
-            return ssm.state_health(cache, cfg)
+            return ssm.state_health(cache, rcfg)
         if kind == "cross":
             self_c, cc = cache
-            return (backend.state_health(self_c, cfg)
-                    & backend.state_health(cc.kv, cfg))
-        return backend.state_health(cache, cfg)
+            return (backend.state_health(self_c, rcfg)
+                    & backend.state_health(cc.kv, rcfg))
+        return backend.state_health(cache, rcfg)
 
     parts = []
-    for (kind, _rl), cache in zip(_runs(cfg.pattern), caches["group"]):
-        h = jax.vmap(jax.vmap(functools.partial(one, kind)))(cache)
+    for (kind, bk, _rl), cache in zip(schedule_runs(cfg), caches["group"]):
+        rcfg = cfg.layer_cfg(bk)
+        h = jax.vmap(jax.vmap(functools.partial(one, kind, rcfg)))(cache)
         parts.append(h.all(axis=(0, 1)))  # [n_groups, rl, slots] -> [slots]
     for kind, cache in zip(cfg.tail, caches["tail"]):
-        parts.append(one(kind, cache))
+        parts.append(one(kind, tail_cfg, cache))
     if caches.get("kv_src") is not None:
         from repro.backends.state import tree_slot_health  # noqa: PLC0415
 

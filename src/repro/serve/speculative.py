@@ -345,7 +345,7 @@ class Order1SelfDraft(DraftProposer):
         dcfg = resolve_backend(eng.cfg).draft_config(eng.cfg)
         if dcfg is None:
             raise ValueError(
-                f"backend {eng.cfg.attention!r} has no self-draft config"
+                f"backend {eng.cfg.backend_desc!r} has no self-draft config"
             )
         self.cfg = dcfg
         with eng._device_ctx():

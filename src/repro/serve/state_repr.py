@@ -15,6 +15,10 @@ codec boundary, chosen at engine construction
     cache held as page pools (pow2 page size) plus ONE shared per-slot
     page table, so short requests stop paying the ``n_max`` capacity
     ceiling; a host-side ``PageAllocator`` owns the free list.
+  * ``HybridCodec`` — both at once for hybrid ``attention_schedule``
+    models: taylor layers quantised AND paged-capable softmax layers
+    paged in the same slot store (the node sets are disjoint; window
+    rings and SSM state stay dense).
 
 The compute path never changes: every dispatch decodes to the dense tree,
 runs the unmodified prefill/decode/verify functions in fp32-accumulate,
@@ -52,8 +56,8 @@ from repro.backends.state import (
     scatter_pages,
 )
 from repro.core import TaylorState
-from repro.models.config import ModelConfig
-from repro.models.lm import _runs, lm_init_caches
+from repro.models.config import ModelConfig, schedule_runs
+from repro.models.lm import lm_init_caches
 from repro.serve.slots import (
     _clear_slot_impl,
     _corrupt_slot_impl,
@@ -81,32 +85,41 @@ def _apply_node(kind: str, fn, *nodes):
     return fn(*nodes)
 
 
-def _map_state_nodes(cfg: ModelConfig, fn, *trees) -> Dict[str, Any]:
+def _map_state_nodes(cfg: ModelConfig, fn, *trees,
+                     with_backend: bool = False) -> Dict[str, Any]:
     """Walk slotted-cache pytrees per backend NODE (not per leaf).
 
     The codec building block: applies ``fn`` to each attention-state node
     (``TaylorState`` / ``KVCache`` / their encoded forms) of one or more
-    structurally-congruent cache trees, using the same per-run-kind
-    dispatch ``lm_init_caches`` used to build them.  ``kv_src`` (and any
-    extra top-level keys of ``trees[0]``) pass through untouched.
+    structurally-congruent cache trees, using the same per-run dispatch
+    ``lm_init_caches`` used to build them — under a hybrid
+    ``attention_schedule`` the group tuple splits by (kind, backend), so
+    the walk stays congruent automatically.  ``kv_src`` (and any extra
+    top-level keys of ``trees[0]``) pass through untouched.
 
     Args:
-      cfg: model config (``pattern``/``tail`` decide the node kinds).
+      cfg: model config (``pattern``/``tail``/schedule decide the runs).
       fn: callable taking one node per input tree, returning the mapped
-        node.
+        node.  With ``with_backend=True`` it is called as
+        ``fn(backend_name, *nodes)`` — how codecs avoid transforming
+        another backend's structurally-identical node (e.g. the paged
+        codec must not page a ``softmax_window`` KV ring).
       *trees: one or more ``{"group", "tail", ...}`` cache pytrees.
+      with_backend: prepend the owning run's backend name to ``fn``'s
+        arguments.
 
     Returns:
       A new dict with ``group``/``tail`` rebuilt from ``fn``'s outputs.
     """
     out = dict(trees[0])
-    kinds = [k for k, _ in _runs(cfg.pattern)]
+    runs = schedule_runs(cfg)
+    bind = (lambda bk: functools.partial(fn, bk)) if with_backend else (lambda bk: fn)
     out["group"] = tuple(
-        _apply_node(kind, fn, *nodes)
-        for kind, nodes in zip(kinds, zip(*[t["group"] for t in trees]))
+        _apply_node(kind, bind(bk), *nodes)
+        for (kind, bk, _), nodes in zip(runs, zip(*[t["group"] for t in trees]))
     )
     out["tail"] = tuple(
-        _apply_node(kind, fn, *nodes)
+        _apply_node(kind, bind(cfg.attention), *nodes)
         for kind, nodes in zip(cfg.tail, zip(*[t["tail"] for t in trees]))
     )
     return out
@@ -474,11 +487,15 @@ class PagedKVCodec(StateCodec):
         Returns:
           Stored-representation cache for ``max_slots`` slots.
         """
+        from repro.backends import get_backend  # noqa: PLC0415
+
         dense = lm_init_caches(self.cfg, self.max_slots, self.n_max,
                                self.dtype_obj)
 
-        def fn(node):
-            if not isinstance(node, KVCache):
+        def fn(bk, node):
+            # backend-gated: a softmax_window KV ring is structurally a
+            # KVCache but already O(window) — it stays dense.
+            if not isinstance(node, KVCache) or not get_backend(bk).supports_paged_kv:
                 return node
 
             def pool(x):
@@ -490,7 +507,7 @@ class PagedKVCodec(StateCodec):
 
             return PagedKVCache(k_pages=pool(node.k), v_pages=pool(node.v))
 
-        out = _map_state_nodes(self.cfg, fn, dense)
+        out = _map_state_nodes(self.cfg, fn, dense, with_backend=True)
         out["paged"] = PagedMeta(
             table=jnp.full((self.max_slots, self.pages_per_slot), -1,
                            jnp.int32),
@@ -509,16 +526,89 @@ class PagedKVCodec(StateCodec):
         Returns:
           Spec pytree congruent with the paged cache.
         """
+        from repro.backends import get_backend  # noqa: PLC0415
+
         rep = jax.sharding.PartitionSpec()
 
-        def fn(node):
-            if not isinstance(node, KVCache):
+        def fn(bk, node):
+            if not isinstance(node, KVCache) or not get_backend(bk).supports_paged_kv:
                 return node
             return PagedKVCache(k_pages=node.k, v_pages=node.v)
 
-        out = _map_state_nodes(self.cfg, fn, logical)
+        out = _map_state_nodes(self.cfg, fn, logical, with_backend=True)
         out["paged"] = PagedMeta(table=rep, length=rep)
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCodec(PagedKVCodec):
+    """Composed representation for hybrid attention schedules.
+
+    One slot store, two compressions over DISJOINT node sets: taylor
+    layers' ``TaylorState`` moments held quantised (int8/fp8, per
+    ``QuantizedCodec``) while paged-capable softmax layers' KV runs as
+    page pools (per ``PagedKVCodec``); window rings and SSM state stay
+    dense.  Because the node sets cannot overlap (a node is a moment
+    state or a KV cache, never both), the two codecs compose by simple
+    chaining — paged gather/scatter first (it owns the ``"paged"`` meta
+    key), quantise/dequantise second.  Slot ops use the generic
+    decode → dense-op → encode path of the base class.
+    """
+
+    qdtype: str = "int8"
+
+    @property
+    def name(self) -> str:
+        """Representation name, e.g. ``"int8+paged"``."""
+        return f"{self.qdtype}+paged"
+
+    def _quant(self) -> "QuantizedCodec":
+        return QuantizedCodec(cfg=self.cfg, max_slots=self.max_slots,
+                              n_max=self.n_max, dtype=self.dtype,
+                              qdtype=self.qdtype)
+
+    def decode(self, stored):
+        """Gather KV pages AND dequantise moment nodes → dense tree.
+
+        Args:
+          stored: hybrid stored cache pytree (with ``"paged"`` meta).
+
+        Returns:
+          Dense cache pytree.
+        """
+        return self._quant().decode(super().decode(stored))
+
+    def encode(self, dense, stored):
+        """Scatter KV into the current page table and quantise moments.
+
+        Args:
+          dense: dense slotted cache pytree.
+          stored: previous stored tree (pools + page table).
+
+        Returns:
+          Updated hybrid stored tree.
+        """
+        return self._quant().encode(super().encode(dense, stored))
+
+    def init_stored(self):
+        """Zero pools + all-free table + quantised zero moments.
+
+        Returns:
+          Stored-representation cache for ``max_slots`` slots.
+        """
+        return self._quant().encode(super().init_stored())
+
+    def logical_specs(self, logical):
+        """Both spec transforms: pools like dense K/V, quantised payloads
+        like dense moments, scales/table replicated.
+
+        Args:
+          logical: dense logical-spec pytree.
+
+        Returns:
+          Spec pytree congruent with the hybrid cache.
+        """
+        return self._quant().logical_specs(super().logical_specs(logical))
 
 
 class PageAllocator:
@@ -656,7 +746,8 @@ class SlotStateStore:
 
     @property
     def name(self) -> str:
-        """Representation name: "dense", "int8", "fp8" or "paged"."""
+        """Representation name: "dense", "int8", "fp8", "paged" or a
+        hybrid combination like "int8+paged"."""
         return "dense" if self.codec is None else self.codec.name
 
     @property
@@ -919,29 +1010,44 @@ def make_state_store(cfg: ModelConfig, max_slots: int, n_max: int,
       A ``SlotStateStore``.
 
     Raises:
-      ValueError: representation unsupported by the backend, both
-        representations requested at once, or a bad page size.
+      ValueError: representation unsupported by every applicable backend,
+        both representations requested for a UNIFORM config, or a bad
+        page size.
     """
-    backend = resolve_backend(cfg)
+    from repro.backends import get_backend  # noqa: PLC0415
+
+    names = cfg.attention_backend_names or (cfg.attention,)
+    for name in names:
+        resolve_backend(cfg.layer_cfg(name))
+    backends = [get_backend(n) for n in names]
+    q_capable = [b.name for b in backends if state_dtype in b.state_dtypes]
+    p_capable = [b.name for b in backends
+                 if b.state_kind == "kv" and b.supports_paged_kv]
     if state_dtype != "dense" and kv_page_size is not None:
-        raise ValueError(
-            "state_dtype quantisation and kv_page_size paging are mutually "
-            "exclusive (they compress different state kinds)"
-        )
+        # Legal only on a hybrid schedule where each compression has its
+        # own disjoint layer set (quantisation acts on moment nodes,
+        # paging on paged-capable KV nodes — never the same node).
+        if not cfg.attention_schedule or not q_capable or not p_capable:
+            raise ValueError(
+                "state_dtype quantisation and kv_page_size paging are "
+                "mutually exclusive (they compress different state kinds) "
+                "— combining them requires a hybrid attention_schedule "
+                "with both a quantisable-moment backend and a paged-KV "
+                "backend"
+            )
     canonical = jnp.dtype(dtype).name
     codec: Optional[StateCodec] = None
     allocator: Optional[PageAllocator] = None
-    if state_dtype != "dense":
-        if state_dtype not in backend.state_dtypes:
-            raise ValueError(
-                f"state_dtype={state_dtype!r} is not supported by the "
-                f"{backend.name!r} backend (supported: "
-                f"{backend.state_dtypes})"
-            )
-        codec = QuantizedCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
-                               dtype=canonical, qdtype=state_dtype)
-    elif kv_page_size is not None:
-        if backend.state_kind != "kv" or not backend.supports_paged_kv:
+    if state_dtype != "dense" and not q_capable:
+        backend = resolve_backend(cfg)
+        raise ValueError(
+            f"state_dtype={state_dtype!r} is not supported by the "
+            f"{backend.name!r} backend (supported: "
+            f"{backend.state_dtypes})"
+        )
+    if kv_page_size is not None:
+        if not p_capable:
+            backend = resolve_backend(cfg)
             raise ValueError(
                 f"kv_page_size: the {backend.name!r} backend holds "
                 f"{backend.state_kind!r} state and does not support paged "
@@ -960,10 +1066,18 @@ def make_state_store(cfg: ModelConfig, max_slots: int, n_max: int,
                 f"kv_pages={total} cannot back even one full slot "
                 f"({pages_per_slot} pages)"
             )
-        codec = PagedKVCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
-                             dtype=canonical, page_size=int(kv_page_size),
-                             total_pages=total)
+        if state_dtype != "dense":
+            codec = HybridCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
+                                dtype=canonical, page_size=int(kv_page_size),
+                                total_pages=total, qdtype=state_dtype)
+        else:
+            codec = PagedKVCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
+                                 dtype=canonical, page_size=int(kv_page_size),
+                                 total_pages=total)
         allocator = PageAllocator(max_slots, pages_per_slot, total,
                                   int(kv_page_size), n_max)
+    elif state_dtype != "dense":
+        codec = QuantizedCodec(cfg=cfg, max_slots=max_slots, n_max=n_max,
+                               dtype=canonical, qdtype=state_dtype)
     return SlotStateStore(cfg, max_slots, n_max, dtype, mesh, rules,
                           codec, allocator)

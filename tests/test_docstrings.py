@@ -28,6 +28,7 @@ MODULES = (
     "repro.backends.registry",
     "repro.backends.state",
     "repro.backends.softmax",
+    "repro.backends.softmax_window",
     "repro.backends.taylor",
     "repro.backends.linear_elu",
     "repro.backends.ssm",
@@ -156,6 +157,7 @@ def test_state_repr_surface_documented():
     )
     from repro.serve.state_repr import (
         DenseCodec,
+        HybridCodec,
         PageAllocator,
         PagedKVCodec,
         QuantizedCodec,
@@ -164,8 +166,8 @@ def test_state_repr_surface_documented():
     )
 
     for cls in (QuantizedLeaf, PagedKVCache, PagedMeta, StateCodec,
-                DenseCodec, QuantizedCodec, PagedKVCodec, PageAllocator,
-                SlotStateStore):
+                DenseCodec, QuantizedCodec, PagedKVCodec, HybridCodec,
+                PageAllocator, SlotStateStore):
         assert (inspect.getdoc(cls) or "").strip(), cls
     for cls, meths in (
         (SlotStateStore, ("write_slot", "read_slot", "read_dense",
@@ -191,8 +193,8 @@ def test_backend_protocol_methods_documented():
             continue
         if not (inspect.getdoc(obj) or "").strip():
             missing.append(f"AttentionBackend.{name}")
-    for cls in (B.SoftmaxBackend, B.TaylorBackend, B.LinearEluBackend,
-                B.SSMBackend):
+    for cls in (B.SoftmaxBackend, B.SoftmaxWindowBackend, B.TaylorBackend,
+                B.LinearEluBackend, B.SSMBackend):
         if not (inspect.getdoc(cls) or "").strip():
             missing.append(cls.__name__)
     assert not missing, f"undocumented backend surface: {missing}"

@@ -20,6 +20,12 @@ The grid derives from the capability flags themselves, so a new backend
 or representation is conformance-tested the moment it registers.  The
 same grid runs on a 2x2 serve mesh in a subprocess (same pattern as
 tests/test_serve_sharded.py).
+
+A mixed-schedule model (taylor default + ``softmax`` at one pattern
+position) additionally runs the whole contract through the combined
+``int8+paged`` HybridCodec — quantised Taylor moments co-resident with
+paged softmax KV in ONE slot store — on a single device and on the 2x2
+mesh.
 """
 
 import os
@@ -251,6 +257,155 @@ def test_health_accepts_healthy_flags_corrupted(backend, rep, models):
 
 
 # ---------------------------------------------------------------------------
+# Mixed schedule: int8 taylor moments + paged softmax KV in ONE store
+# ---------------------------------------------------------------------------
+
+
+def _mixed_cfg():
+    """Two-layer hybrid: layer 0 taylor (quantisable moments), layer 1
+    softmax (pageable KV) — the HybridCodec's motivating config."""
+    return get_reduced("qwen2-1.5b").replace(
+        pattern=("attn", "attn"), n_groups=1, attention="taylor",
+        attention_schedule={1: "softmax"},
+    )
+
+
+@pytest.fixture(scope="module")
+def mixed_model():
+    cfg = _mixed_cfg()
+    return cfg, lm_init(jax.random.PRNGKey(0), cfg)
+
+
+def _mixed_store(cfg, mesh=None, rules=None):
+    return make_state_store(
+        cfg, SLOTS, N_MAX, jnp.dtype(cfg.dtype), mesh=mesh, rules=rules,
+        state_dtype="int8", kv_page_size=PAGE,
+    )
+
+
+def _split_kv_moments(tree):
+    """Partition leaves into (KV-cache leaves, everything else)."""
+    from repro.backends.state import KVCache
+
+    kv, rest = [], []
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            kv.extend(jax.tree_util.tree_leaves(node))
+        else:
+            rest.append(node)
+
+    jax.tree_util.tree_map(
+        walk, tree, is_leaf=lambda x: isinstance(x, KVCache))
+    return kv, jax.tree_util.tree_leaves(rest)
+
+
+def test_mixed_schedule_store_is_hybrid(mixed_model):
+    """The combined representation resolves to the chained codec and the
+    slot kinds report both state families."""
+    from repro.serve.slots import slot_state_kinds
+
+    cfg, _ = mixed_model
+    store = _mixed_store(cfg)
+    assert store.name == "int8+paged"
+    assert store.paged
+    assert slot_state_kinds(cfg) == {"attn": "moments+kv"}
+
+
+def test_mixed_schedule_round_trip(mixed_model):
+    """KV leaves (paged, lossless) round-trip bit-exact while Taylor
+    moment leaves quantise within the int8 step — in the same store —
+    and a second round-trip is idempotent for the whole tree."""
+    cfg, params = mixed_model
+    store = _mixed_store(cfg)
+    states = _slot_states(cfg, params)
+    caches = _fill_store(store, states)
+    reads = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+             for j in range(SLOTS)]
+    for st, r in zip(states, reads):
+        kv_r, mo_r = _split_kv_moments(r)
+        kv_s, mo_s = _split_kv_moments(st)
+        for x, y in zip(kv_r, kv_s):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg="paged KV not lossless")
+        _assert_trees_close(mo_r, mo_s, _QTOL["int8"])
+    for j, r in enumerate(reads):
+        caches = store.write_slot(caches, r, jnp.asarray(j, jnp.int32))
+    for j, r in enumerate(reads):
+        again = store.read_slot(caches, jnp.asarray(j, jnp.int32))
+        _assert_trees_equal(again, r, f"slot {j} not idempotent")
+
+
+def test_mixed_schedule_clear_isolation(mixed_model):
+    cfg, params = mixed_model
+    store = _mixed_store(cfg)
+    caches = _fill_store(store, _slot_states(cfg, params))
+    before = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+              for j in range(SLOTS)]
+    caches = store.clear_slot(caches, jnp.asarray(1, jnp.int32))
+    for j in (0, 2):
+        _assert_trees_equal(
+            store.read_slot(caches, jnp.asarray(j, jnp.int32)), before[j],
+            f"clear_slot(1) disturbed slot {j}")
+    fresh = _mixed_store(cfg)
+    _assert_trees_equal(
+        store.read_slot(caches, jnp.asarray(1, jnp.int32)),
+        fresh.read_slot(fresh.init_caches(), jnp.asarray(1, jnp.int32)),
+        "cleared slot != fresh slot")
+    assert store.allocator.table[1].max() < 0, "pages leaked on clear"
+
+
+def test_mixed_schedule_snapshot_restore_token_identity(mixed_model):
+    """Preemption handoff through the hybrid store: decode continues
+    token-identical after snapshot → recycle → restore."""
+    cfg, params = mixed_model
+    store = _mixed_store(cfg)
+    states = _slot_states(cfg, params)
+    caches = store.init_caches()
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
+    logits, run = lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = 10
+    for i in range(4):
+        logits, run = lm_decode_step(params, tok, run, jnp.asarray(pos + i), cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos += 4
+    caches = store.ensure_tokens(caches, 0, pos)
+    caches = store.write_slot(caches, run, jnp.asarray(0, jnp.int32))
+    snap = store.read_slot(caches, jnp.asarray(0, jnp.int32))
+    caches = store.clear_slot(caches, jnp.asarray(0, jnp.int32))
+    caches = store.ensure_tokens(caches, 0, LENS[1])
+    caches = store.write_slot(caches, states[1], jnp.asarray(0, jnp.int32))
+    caches = store.clear_slot(caches, jnp.asarray(0, jnp.int32))
+    caches = store.ensure_tokens(caches, 0, pos)
+    caches = store.write_slot(caches, snap, jnp.asarray(0, jnp.int32))
+    restored = store.read_slot(caches, jnp.asarray(0, jnp.int32))
+    _assert_trees_equal(restored, snap, "restore not bit-exact")
+
+    def continue_from(state, t0):
+        out, t, s = [], t0, state
+        for i in range(4):
+            lg, s = lm_decode_step(params, t, s, jnp.asarray(pos + i), cfg)
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            out.append(int(t[0]))
+        return out
+
+    assert continue_from(restored, tok) == continue_from(snap, tok)
+
+
+def test_mixed_schedule_health(mixed_model):
+    cfg, params = mixed_model
+    store = _mixed_store(cfg)
+    caches = _fill_store(store, _slot_states(cfg, params))
+    assert np.asarray(store.health(caches)).all(), "healthy state flagged"
+    caches = store.corrupt_slot(
+        caches, jnp.asarray(2, jnp.int32), jnp.asarray(np.nan, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(store.health(caches)), [True, True, False])
+
+
+# ---------------------------------------------------------------------------
 # The same grid on a 2x2 serve mesh (subprocess with 8 fake CPU devices)
 # ---------------------------------------------------------------------------
 
@@ -352,3 +507,63 @@ def test_conformance_grid_on_2x2_mesh():
                 for rep in (list(backend.state_dtypes)
                             + (["paged"] if backend.supports_paged_kv else []))}
     assert done == expected, f"missing combos: {expected - done}"
+
+
+def test_mixed_schedule_on_2x2_mesh():
+    """int8 taylor moments + paged softmax KV in ONE sharded slot store:
+    round-trip idempotency, clear isolation and health on a dp=2 × tp=2
+    mesh."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_reduced
+        from repro import distributed as dist
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import lm_init
+        from repro.models.lm import lm_prefill
+        from repro.serve import make_state_store
+
+        N_MAX, SLOTS, PAGE, LENS = 32, 2, 8, (7, 12)
+        mesh = make_serve_mesh(2, 2)
+        rules = dist.rules_for_mesh(mesh)
+        cfg = get_reduced("qwen2-1.5b").replace(
+            pattern=("attn", "attn"), n_groups=1, attention="taylor",
+            attention_schedule={1: "softmax"})
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        store = make_state_store(cfg, SLOTS, N_MAX, jnp.dtype(cfg.dtype),
+                                 mesh=mesh, rules=rules,
+                                 state_dtype="int8", kv_page_size=PAGE)
+        assert store.name == "int8+paged", store.name
+        states = []
+        for j, n in enumerate(LENS):
+            rng = np.random.default_rng(100 + j)
+            toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, n)), jnp.int32)
+            states.append(
+                lm_prefill(params, {"tokens": toks}, cfg, n_max=N_MAX)[1])
+        caches = store.init_caches()
+        for j, st in enumerate(states):
+            caches = store.ensure_tokens(caches, j, LENS[j])
+            caches = store.write_slot(caches, st, jnp.asarray(j, jnp.int32))
+        reads = [store.read_slot(caches, jnp.asarray(j, jnp.int32))
+                 for j in range(SLOTS)]
+        for j, r in enumerate(reads):
+            caches = store.write_slot(caches, r, jnp.asarray(j, jnp.int32))
+            again = store.read_slot(caches, jnp.asarray(j, jnp.int32))
+            for x, y in zip(jax.tree_util.tree_leaves(again),
+                            jax.tree_util.tree_leaves(r)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        before = store.read_slot(caches, jnp.asarray(0, jnp.int32))
+        caches = store.clear_slot(caches, jnp.asarray(1, jnp.int32))
+        for x, y in zip(
+                jax.tree_util.tree_leaves(
+                    store.read_slot(caches, jnp.asarray(0, jnp.int32))),
+                jax.tree_util.tree_leaves(before)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert np.asarray(store.health(caches)).all()
+        caches = store.corrupt_slot(
+            caches, jnp.asarray(0, jnp.int32),
+            jnp.asarray(np.nan, jnp.float32))
+        np.testing.assert_array_equal(
+            np.asarray(store.health(caches)), [False, True])
+        print("OK mixed int8+paged")
+    """)
+    assert "OK mixed int8+paged" in out
